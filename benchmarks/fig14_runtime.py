@@ -1,0 +1,49 @@
+"""Fig. 14: algorithm runtime, GrIn vs SLSQP, 3..10 processor types.
+
+Paper protocol: only count runs where both deliver similar throughput (within
+5%) to avoid quality/runtime trade-off games; average 100 runs per size.
+Claim: GrIn faster (up to ~2x) and more scalable."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Timer, emit, save_json
+from repro.core import grin_solve, random_affinity_matrix, slsqp_solve
+
+
+def run(sizes=range(3, 11), n_runs: int = 40, seed: int = 9):
+    rng = np.random.default_rng(seed)
+    rows = []
+    with Timer() as t:
+        for size in sizes:
+            g_times, s_times = [], []
+            for _ in range(n_runs):
+                mu = random_affinity_matrix(rng, size, size)
+                nt = rng.integers(2, 12, size=size)
+                t0 = time.perf_counter()
+                g = grin_solve(mu, nt)
+                g_dt = time.perf_counter() - t0
+                s = slsqp_solve(mu, nt)
+                if s.x_sys <= 0 or abs(g.x_sys - s.x_sys) / max(s.x_sys, 1e-9) > 0.05:
+                    continue  # paper: comparable-quality runs only
+                g_times.append(g_dt)
+                s_times.append(s.runtime_s)
+            if g_times:
+                rows.append({"types": size,
+                             "grin_ms": float(np.mean(g_times)) * 1e3,
+                             "slsqp_ms": float(np.mean(s_times)) * 1e3,
+                             "speedup": float(np.mean(s_times) / np.mean(g_times)),
+                             "kept_runs": len(g_times)})
+    sp = [r["speedup"] for r in rows]
+    payload = {"rows": rows, "max_speedup": max(sp), "min_speedup": min(sp)}
+    save_json("fig14_runtime", payload)
+    emit("fig14_runtime", t.us,
+         f"speedup@3={rows[0]['speedup']:.2f}x;speedup@10={rows[-1]['speedup']:.2f}x;"
+         f"max={max(sp):.2f}x(paper ~2x)")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,151 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from reports/.
+
+Usage: PYTHONPATH=src:. python -m benchmarks.make_experiments_md
+Reads reports/dryrun (baseline), reports/dryrun_opt (optimized),
+reports/benchmarks/*.json; writes EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.roofline import CHIPS, HBM, LINK, PEAK, analytic_costs
+from repro.configs import ARCHS, shapes_for
+
+PREAMBLE_PATH = "benchmarks/experiments_preamble.md"
+PERF_PATH = "benchmarks/perf_log.md"
+
+
+def _load(path):
+    return json.load(open(path)) if os.path.exists(path) else None
+
+
+def _fmt_bytes(b):
+    return f"{b/1e9:.2f}GB" if b >= 1e9 else f"{b/1e6:.1f}MB"
+
+
+def roofline_rows(dryrun_dir):
+    rows = []
+    for cfg in ARCHS.values():
+        for shp in shapes_for(cfg):
+            for mesh in ("single",):
+                rec = _load(os.path.join(dryrun_dir,
+                                         f"{cfg.name}__{shp.name}__{mesh}.json"))
+                if not rec or rec.get("status") != "ok":
+                    continue
+                ac = analytic_costs(cfg.name, shp.name,
+                                    rec.get("microbatches", 1))
+                tc = ac["flops"] / (CHIPS * PEAK)
+                tm = ac["hbm_bytes"] / (CHIPS * HBM)
+                tl = rec["collectives"]["total"] / LINK
+                terms = {"compute": tc, "memory": tm, "collective": tl}
+                dom = max(terms, key=terms.get)
+                rows.append({
+                    "arch": cfg.name, "shape": shp.name, "micro":
+                        rec.get("microbatches", 1),
+                    "tc": tc, "tm": tm, "tl": tl, "dom": dom,
+                    "model_flops": ac["model_flops"], "hlo_flops": ac["flops"],
+                    "useful": ac["model_flops"] / ac["flops"],
+                    "frac": tc / max(terms.values()),
+                    "temp_gib": rec.get("memory", {}).get(
+                        "temp_size_in_bytes", 0) / 2**30,
+                    "coll_b": rec["collectives"]["total"],
+                    "mode": rec.get("sharding_mode", "2d"),
+                })
+    return rows
+
+
+def dryrun_table(dryrun_dir):
+    lines = ["| arch | shape | mesh | microbatches | compile | temp/dev | collective B/dev | status |",
+             "|---|---|---|---|---|---|---|---|"]
+    n_ok = 0
+    for cfg in ARCHS.values():
+        for shp in shapes_for(cfg):
+            for mesh in ("single", "multi"):
+                rec = _load(os.path.join(dryrun_dir,
+                                         f"{cfg.name}__{shp.name}__{mesh}.json"))
+                if not rec:
+                    continue
+                ok = rec.get("status") == "ok"
+                n_ok += ok
+                lines.append(
+                    f"| {cfg.name} | {shp.name} | {mesh} | "
+                    f"{rec.get('microbatches', 1)} | {rec.get('compile_s', '-')}s | "
+                    f"{rec.get('memory', {}).get('temp_size_in_bytes', 0)/2**30:.1f}GiB | "
+                    f"{_fmt_bytes(rec.get('collectives', {}).get('total', 0))} | "
+                    f"{'ok' if ok else 'FAIL'} |")
+    return lines, n_ok
+
+
+def roofline_table(rows):
+    lines = ["| arch | shape | mode | mb | compute | memory | collective | dominant | MODEL/HLO | roofline frac |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mode']} | {r['micro']} | "
+            f"{r['tc']*1e3:.2f}ms | {r['tm']*1e3:.2f}ms | {r['tl']*1e3:.2f}ms | "
+            f"**{r['dom']}** | {r['useful']:.2f} | {r['frac']:.3f} |")
+    return lines
+
+
+def main():
+    base = roofline_rows("reports/dryrun")
+    opt = roofline_rows("reports/dryrun_opt")
+    dr_base, n_base = dryrun_table("reports/dryrun")
+    dr_opt, n_opt = dryrun_table("reports/dryrun_opt")
+
+    out = []
+    if os.path.exists(PREAMBLE_PATH):
+        out.append(open(PREAMBLE_PATH).read())
+
+    out.append("\n## §Dry-run\n")
+    out.append(f"Baseline sweep: **{n_base} cells compiled OK** "
+               "(32 arch x shape combos x {single 16x16, multi 2x16x16}; "
+               "8 long_500k cells skipped by the full-attention rule, "
+               "DESIGN.md §4).\n")
+    out.append("\n<details><summary>Baseline dry-run table (ZeRO-3 2D "
+               "sharding, global-jit MoE)</summary>\n")
+    out.extend(dr_base)
+    out.append("\n</details>\n")
+    out.append(f"\nOptimized sweep: **{n_opt} cells compiled OK** "
+               "(§Perf defaults: pure-DP trains on single pod, ZeRO-2 "
+               "compute copies, shard_map MoE, TP-only serving).\n")
+    out.append("\n<details><summary>Optimized dry-run table</summary>\n")
+    out.extend(dr_opt)
+    out.append("\n</details>\n")
+
+    out.append("\n## §Roofline (single-pod 16x16 = 256 chips; v5e "
+               "constants: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s/link)\n")
+    out.append("\nTerms: compute = HLO_FLOPs/(chips*peak); memory = "
+               "HLO_bytes/(chips*HBM_bw); collective = per-device collective "
+               "bytes (loop-aware HLO parse)/link_bw. Methodology + caveats: "
+               "see §Methodology below.\n")
+    out.append("\n### Paper-faithful baseline (all 32 cells)\n")
+    out.extend(roofline_table(base))
+    out.append("\n### Beyond-paper optimized (all 32 cells)\n")
+    out.extend(roofline_table(opt))
+
+    # per-cell improvement summary
+    out.append("\n### Baseline -> optimized, collective term\n")
+    out.append("| arch | shape | baseline | optimized | reduction |")
+    out.append("|---|---|---|---|---|")
+    bmap = {(r["arch"], r["shape"]): r for r in base}
+    for r in opt:
+        b = bmap.get((r["arch"], r["shape"]))
+        if not b:
+            continue
+        red = b["tl"] / max(r["tl"], 1e-12)
+        out.append(f"| {r['arch']} | {r['shape']} | {b['tl']*1e3:.1f}ms | "
+                   f"{r['tl']*1e3:.1f}ms | {red:.1f}x |")
+
+    if os.path.exists(PERF_PATH):
+        out.append("\n" + open(PERF_PATH).read())
+
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write("\n".join(out))
+    print(f"EXPERIMENTS.md written; baseline cells={len(base)} "
+          f"opt cells={len(opt)}")
+
+
+if __name__ == "__main__":
+    main()

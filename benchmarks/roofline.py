@@ -1,0 +1,279 @@
+"""Roofline analysis per (arch x shape) on the single-pod mesh (deliverable g).
+
+Terms (per assignment, TPU v5e):
+    compute    = HLO_FLOPs   / (chips * 197e12)
+    memory     = HLO_bytes   / (chips * 819e9)
+    collective = coll_bytes  / (chips * 50e9)
+
+Sources and methodology:
+  * HLO_FLOPs / HLO_bytes — analytic loop-aware accounting over the model
+    graph (documented formulas below). XLA-CPU's cost_analysis counts while
+    bodies ONCE (scans over layers/microbatches are loops), so the compiled
+    number under-counts by the trip counts; our accounting multiplies them
+    out and is cross-validated against cost_analysis on unrolled small
+    configs (tests/test_roofline.py).
+  * collective bytes — parsed from the compiled SPMD module per device with
+    while-loop trip multipliers (repro.launch.dryrun.collective_bytes);
+    already per-device, so the term divides by link_bw only.
+  * MODEL_FLOPS = 6*N*T (train) / 2*N*T (prefill) / 2*N*B (decode); N_active
+    for MoE. The ratio MODEL_FLOPS/HLO_FLOPs exposes remat/causal/capacity
+    waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+
+from benchmarks.common import Timer, emit, save_json
+from repro.configs import ARCHS, get_shape, shapes_for
+from repro.models.model import count_params
+
+PEAK = 197e12
+HBM = 819e9
+LINK = 50e9
+CHIPS = 256
+
+
+def _attn_params(cfg):
+    hd = cfg.resolved_head_dim
+    return cfg.d_model * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd \
+        + cfg.n_heads * hd * cfg.d_model
+
+
+def _mlp_params(cfg):
+    mats = 3 if cfg.mlp_style == "swiglu" else 2
+    return mats * cfg.d_model * cfg.d_ff
+
+
+def _active_params(cfg) -> float:
+    """Matmul-active parameter count (MoE: top_k of n_experts)."""
+    n = count_params(cfg)
+    if cfg.family == "moe":
+        expert = cfg.n_experts * cfg.d_model * 3 * cfg.moe_d_ff
+        active = cfg.top_k * cfg.d_model * 3 * cfg.moe_d_ff
+        n = n - cfg.n_layers * (expert - active)
+    return float(n)
+
+
+def _matmul_params(cfg) -> float:
+    """Params participating in matmuls during one token's fwd (embed gather
+    excluded; tied head counts once as a matmul)."""
+    n = _active_params(cfg)
+    emb = cfg.vocab_size * cfg.d_model
+    if cfg.family == "audio":
+        return n - cfg.n_codebooks * emb          # K embeds; K heads matmul
+    return n - emb                                 # embed gather is not a matmul
+
+
+def _attn_flops_fwd(cfg, batch, seq, causal_half=True) -> float:
+    """Attention score+value FLOPs (Pallas kernel skips above-diagonal)."""
+    if cfg.family == "ssm":
+        return 0.0
+    hd = cfg.resolved_head_dim
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_every
+        w = cfg.sliding_window or seq
+        eff = min(w, seq)
+        full = 4.0 * batch * cfg.n_heads * hd * seq * eff
+        return n_attn * (full * (0.5 if causal_half and eff == seq else 1.0))
+    n_attn = cfg.n_layers
+    full = 4.0 * batch * cfg.n_heads * hd * seq * seq
+    return n_attn * full * (0.5 if causal_half else 1.0)
+
+
+def _ssd_flops_fwd(cfg, batch, seq) -> float:
+    """Chunked linear-recurrence FLOPs (intra c-block + state terms)."""
+    t = batch * seq
+    c = cfg.ssm_chunk
+    if cfg.family == "hybrid":
+        h, dk, dv = cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+        layers = cfg.n_layers
+    elif cfg.family == "ssm":
+        h, dk, dv = cfg.n_heads, cfg.resolved_head_dim, cfg.resolved_head_dim
+        layers = cfg.n_layers  # mLSTM dominate; sLSTM scan is elementwise
+    else:
+        return 0.0
+    per_tok = 2.0 * c * dk + 2.0 * c * dv + 4.0 * dk * dv
+    return layers * t * h * per_tok
+
+
+def _moe_overcompute(cfg) -> float:
+    """Capacity padding multiplies expert FLOPs by the capacity factor."""
+    return cfg.capacity_factor if cfg.family == "moe" else 1.0
+
+
+def analytic_costs(arch: str, shape_name: str, microbatches: int = 1) -> dict:
+    cfg = ARCHS[arch]
+    shape = get_shape(shape_name)
+    B, S = shape.global_batch, shape.seq_len
+    n_mm = _matmul_params(cfg)
+    n_act = _active_params(cfg)
+    n_total = float(count_params(cfg))
+
+    if shape.kind == "train":
+        t = B * S
+        mm = 2.0 * n_mm * t
+        if cfg.family == "moe":
+            expert_part = cfg.n_layers * cfg.top_k * cfg.d_model * 3 * cfg.moe_d_ff
+            mm += 2.0 * t * expert_part * (_moe_overcompute(cfg) - 1.0)
+        attn = _attn_flops_fwd(cfg, B, S)
+        ssd = _ssd_flops_fwd(cfg, B, S)
+        fwd = mm + attn + ssd
+        # bwd = 2x fwd matmuls; full remat recomputes fwd once more
+        flops = fwd * (1.0 + 2.0 + 1.0)
+        model_flops = 6.0 * n_act * t
+        # HBM: optimizer update (params r/w fp32 + m/v r/w) + per-micro param
+        # streams (bf16 compute copies) + activation streams (~14 D bytes/tok
+        # /layer fwd, x2 with remat+bwd)
+        hbm = (n_total * (4 + 4 + 8 + 8 + 4)
+               + microbatches * 2.0 * n_total * 2
+               + t * cfg.n_layers * cfg.d_model * 2 * 14 * 2)
+    elif shape.kind == "prefill":
+        t = B * S
+        flops = 2.0 * n_mm * t + _attn_flops_fwd(cfg, B, S) \
+            + _ssd_flops_fwd(cfg, B, S)
+        model_flops = 2.0 * n_act * t
+        hbm = 2.0 * n_total + t * cfg.n_layers * cfg.d_model * 2 * 14 \
+            + _kv_cache_bytes(cfg, B, S)
+    else:  # decode: one token per sequence
+        flops = 2.0 * n_mm * B + _attn_decode_flops(cfg, B, S) \
+            + _ssd_decode_flops(cfg, B)
+        model_flops = 2.0 * n_act * B
+        hbm = 2.0 * n_total + _kv_cache_bytes(cfg, B, S) \
+            + _state_bytes(cfg, B) * 2
+    return {"flops": flops, "model_flops": model_flops, "hbm_bytes": hbm,
+            "n_params": n_total, "n_active": n_act}
+
+
+def _kv_cache_bytes(cfg, batch, seq) -> float:
+    hd = cfg.resolved_head_dim
+    if cfg.family == "ssm":
+        return 0.0
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_every
+        eff = min(cfg.sliding_window or seq, seq)
+        return n_attn * 2.0 * batch * eff * cfg.n_kv_heads * hd * 2
+    return cfg.n_layers * 2.0 * batch * seq * cfg.n_kv_heads * hd * 2
+
+
+def _state_bytes(cfg, batch) -> float:
+    if cfg.family == "hybrid":
+        return cfg.n_layers * batch * cfg.n_ssm_heads * cfg.ssm_state \
+            * cfg.ssm_head_dim * 4
+    if cfg.family == "ssm":
+        hd = cfg.resolved_head_dim
+        return cfg.n_layers * batch * cfg.n_heads * hd * hd * 4
+    return 0.0
+
+
+def _attn_decode_flops(cfg, batch, seq) -> float:
+    if cfg.family == "ssm":
+        return 0.0
+    hd = cfg.resolved_head_dim
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_every
+        eff = min(cfg.sliding_window or seq, seq)
+        return n_attn * 4.0 * batch * cfg.n_heads * hd * eff
+    return cfg.n_layers * 4.0 * batch * cfg.n_heads * hd * seq
+
+
+def _ssd_decode_flops(cfg, batch) -> float:
+    if cfg.family == "hybrid":
+        h, dk, dv, layers = (cfg.n_ssm_heads, cfg.ssm_state,
+                             cfg.ssm_head_dim, cfg.n_layers)
+    elif cfg.family == "ssm":
+        hd = cfg.resolved_head_dim
+        h, dk, dv, layers = cfg.n_heads, hd, hd, cfg.n_layers
+    else:
+        return 0.0
+    return layers * batch * h * 4.0 * dk * dv
+
+
+def _advice(dom: str, cell: dict) -> str:
+    if dom == "collective":
+        return ("reduce collective volume: bf16/int8 reduction dtype, "
+                "reduce-scatter instead of all-reduce, overlap with compute")
+    if dom == "memory":
+        return ("raise arithmetic intensity: larger per-step batch, fuse "
+                "cache updates, quantize KV cache / weights")
+    return ("push MFU: bigger MXU-aligned tiles, fewer reshards, skip masked "
+            "attention tiles")
+
+
+def build_table(dryrun_dir: str = "reports/dryrun", mesh: str = "single") -> list[dict]:
+    rows = []
+    for cfg in ARCHS.values():
+        for shp in shapes_for(cfg):
+            path = os.path.join(dryrun_dir,
+                                f"{cfg.name}__{shp.name}__{mesh}.json")
+            if not os.path.exists(path):
+                continue
+            rec = json.load(open(path))
+            if rec.get("status") != "ok":
+                rows.append({"arch": cfg.name, "shape": shp.name,
+                             "status": rec.get("status")})
+                continue
+            micro = rec.get("microbatches", 1)
+            ac = analytic_costs(cfg.name, shp.name, micro)
+            coll_per_dev = rec["collectives"]["total"]
+            t_compute = ac["flops"] / (CHIPS * PEAK)
+            t_memory = ac["hbm_bytes"] / (CHIPS * HBM)
+            t_coll = coll_per_dev / LINK
+            terms = {"compute": t_compute, "memory": t_memory,
+                     "collective": t_coll}
+            dom = max(terms, key=terms.get)
+            bound = max(terms.values())
+            roofline_frac = t_compute / bound if bound > 0 else 0.0
+            rows.append({
+                "arch": cfg.name, "shape": shp.name, "status": "ok",
+                "microbatches": micro,
+                "compute_s": t_compute, "memory_s": t_memory,
+                "collective_s": t_coll, "dominant": dom,
+                "model_flops": ac["model_flops"], "hlo_flops": ac["flops"],
+                "useful_ratio": ac["model_flops"] / ac["flops"],
+                "roofline_fraction": roofline_frac,
+                "mem_per_dev_gb": rec.get("memory", {}).get(
+                    "temp_size_in_bytes", 0) / 2**30,
+                "advice": _advice(dom, rec),
+            })
+    return rows
+
+
+def run():
+    with Timer() as t:
+        base = build_table("reports/dryrun")
+        opt = build_table("reports/dryrun_opt") \
+            if os.path.isdir("reports/dryrun_opt") else []
+
+    def summarize(rows):
+        ok = [r for r in rows if r.get("status") == "ok"]
+        dom = {}
+        for r in ok:
+            dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+        worst = min(ok, key=lambda r: r["roofline_fraction"]) if ok else {}
+        best = max(ok, key=lambda r: r["roofline_fraction"]) if ok else {}
+        med = sorted(r["roofline_fraction"] for r in ok)[len(ok) // 2] if ok else 0
+        return ok, dom, worst, best, med
+
+    ok_b, dom_b, worst_b, _, med_b = summarize(base)
+    ok_o, dom_o, worst_o, best_o, med_o = summarize(opt)
+    save_json("roofline", {"baseline": base, "optimized": opt,
+                           "dominants_baseline": dom_b,
+                           "dominants_optimized": dom_o})
+    emit("roofline", t.us,
+         f"baseline:cells={len(ok_b)};dominants={dom_b};median_frac={med_b:.3f}|"
+         f"optimized:cells={len(ok_o)};dominants={dom_o};median_frac={med_o:.3f};"
+         f"best_frac={best_o.get('roofline_fraction', 0):.3f}"
+         f"@{best_o.get('arch')}/{best_o.get('shape')}")
+    return base + opt
+
+
+if __name__ == "__main__":
+    for r in run():
+        if r.get("status") == "ok":
+            print(f"{r['arch']:24s} {r['shape']:12s} mb={r['microbatches']:<3d}"
+                  f"comp={r['compute_s']*1e3:9.2f}ms mem={r['memory_s']*1e3:9.2f}ms "
+                  f"coll={r['collective_s']*1e3:9.2f}ms dom={r['dominant']:10s} "
+                  f"useful={r['useful_ratio']:.2f} frac={r['roofline_fraction']:.3f}")

@@ -1,0 +1,25 @@
+"""Paper core: optimal heterogeneous task scheduling (CAB + GrIn).
+
+Chen & Marculescu, "Task Scheduling for Heterogeneous Multicore Systems".
+"""
+from repro.core.affinity import (AffinityCase, PowerModel, CONSTANT_POWER,
+                                 PROPORTIONAL_POWER, classify_2x2,
+                                 random_affinity_matrix, validate_affinity_2x2)
+from repro.core.cab import CABSolution, cab_closed_form_x, cab_solve, cab_target_state
+from repro.core.energy import edp, expected_delay, expected_energy_per_task
+from repro.core.exhaustive import exhaustive_count, exhaustive_solve
+from repro.core.grin import GrInResult, grin_init, grin_solve, grin_solve_jax
+from repro.core.grin_plus import (grin_multistart_solve, grin_plus_solve,
+                                  grin_solve_from)
+from repro.core.policies import (ALL_BASELINES, BestFitDispatcher, CABDispatcher,
+                                 Dispatcher, FixedTargetDispatcher,
+                                 GrInDispatcher, JoinShortestQueueDispatcher,
+                                 LoadBalancingDispatcher, RandomDispatcher,
+                                 SystemView, make_policies)
+from repro.core.slsqp import SLSQPResult, slsqp_solve
+from repro.core.throughput import (column_throughputs, delta_x_add,
+                                   delta_x_remove, state_from_pair,
+                                   system_throughput, system_throughput_jax,
+                                   throughput_2x2, throughput_map_2x2)
+
+__all__ = [s for s in dir() if not s.startswith("_")]

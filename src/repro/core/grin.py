@@ -1,0 +1,204 @@
+"""GrIn (Greedy-Increase) near-optimal placement for k task types x l
+processor types (paper Sec. 4.2, Algorithms 1-2, Lemma 8).
+
+A move relocates one p-type task from processor `src` to `dst`. Because the
+two columns are disjoint, the exact throughput change is
+
+    dX = dminus[p, src] + dplus[p, dst]
+
+with (paper eq. 33-36, with the remove-delta sign fixed so that dminus is the
+CHANGE in X_j caused by the removal — the paper's Lemma-8 prose and Algorithm 2
+line 7 disagree on this sign; the math below is the self-consistent version):
+
+    dplus[p, j]  = (mu[p, j] - X_j) / (col_j + 1)
+    dminus[p, j] = (X_j - mu[p, j]) / (col_j - 1)     (col_j > 1)
+                 = -mu[p, j]                          (col_j == 1, column empties)
+
+GrIn accepts a move only when dX > 0, hence X_sys strictly increases per move
+(Lemma 8) and the algorithm terminates at a local maximum. Per-sweep cost is
+O(k*l) using the top-2 trick to resolve the src != dst constraint.
+
+Two implementations: NumPy (host scheduler) and pure-JAX (jit/vmap-able, used
+for vectorized policy sweeps and on-device re-solves).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.throughput import (column_throughputs, delta_x_add,
+                                   delta_x_remove, system_throughput)
+
+_TOL = 1e-12
+
+
+def grin_init(mu: np.ndarray, n_tasks: np.ndarray) -> np.ndarray:
+    """Algorithm 1: initial placement from the max-per-column structure."""
+    mu = np.asarray(mu, dtype=np.float64)
+    n_tasks = np.asarray(n_tasks, dtype=np.int64)
+    k, l = mu.shape
+    N = np.zeros((k, l), dtype=np.int64)
+    # U: 1 at the row achieving the max of each column.
+    top_row = np.argmax(mu, axis=0)
+    for row in range(k):
+        cols = np.where(top_row == row)[0]
+        left = int(n_tasks[row])
+        if left == 0:
+            continue
+        if len(cols) > 1:
+            # One task to each claimed column (fastest first), remainder to the
+            # slowest claimed column (Alg. 1 lines 6-13).
+            order = cols[np.argsort(-mu[row, cols])]
+            for c in order:
+                if left == 0:
+                    break
+                N[row, c] += 1
+                left -= 1
+            N[row, order[-1]] += left
+        elif len(cols) == 1:
+            N[row, cols[0]] = left
+        else:
+            # Row claims no column: start from its best-fit processor; the
+            # greedy loop redistributes (Alg. 1 lines 18-21).
+            N[row, int(np.argmax(mu[row]))] = left
+    return N
+
+
+def _best_move_for_row(N: np.ndarray, mu: np.ndarray, p: int):
+    """Best (gain, src, dst) move of one p-type task; gain may be <= 0."""
+    dplus = delta_x_add(N, mu, p)
+    dminus = delta_x_remove(N, mu, p)  # +inf where N[p, j] == 0? -> -inf there
+    feas = N[p] > 0
+    if not feas.any():
+        return 0.0, -1, -1
+    dminus = np.where(feas, dminus, -np.inf)
+    # top-2 of each to satisfy src != dst in O(l)
+    src_order = np.argsort(-dminus)[:2]
+    dst_order = np.argsort(-dplus)[:2]
+    best = (-np.inf, -1, -1)
+    for s in src_order:
+        if not np.isfinite(dminus[s]):
+            continue
+        for d in dst_order:
+            if s == d:
+                continue
+            gain = dminus[s] + dplus[d]
+            if gain > best[0]:
+                best = (gain, int(s), int(d))
+    return best
+
+
+@dataclasses.dataclass
+class GrInResult:
+    N: np.ndarray
+    x_sys: float
+    moves: int
+    sweeps: int
+
+
+def grin_solve(mu: np.ndarray, n_tasks: np.ndarray,
+               max_sweeps: int = 10_000) -> GrInResult:
+    """Algorithm 2 with repeated row sweeps until a local maximum."""
+    mu = np.asarray(mu, dtype=np.float64)
+    n_tasks = np.asarray(n_tasks, dtype=np.int64)
+    k, _ = mu.shape
+    N = grin_init(mu, n_tasks)
+    moves = 0
+    sweeps = 0
+    while sweeps < max_sweeps:
+        sweeps += 1
+        moved = False
+        for p in range(k):
+            gain, src, dst = _best_move_for_row(N, mu, p)
+            if src >= 0 and gain > _TOL:
+                N[p, src] -= 1
+                N[p, dst] += 1
+                moves += 1
+                moved = True
+        if not moved:
+            break
+    return GrInResult(N=N, x_sys=system_throughput(N, mu), moves=moves,
+                      sweeps=sweeps)
+
+
+# ---------------------------------------------------------------------------
+# Pure-JAX GrIn: steepest-ascent variant inside lax.while_loop. Used where the
+# solver must live inside a jitted pipeline (vectorized policy sweeps, elastic
+# re-solve on device). Semantics: repeatedly apply the single best improving
+# move across ALL rows until none exists. Reaches a local max of the same
+# objective; may take a different path than the sweep variant.
+# ---------------------------------------------------------------------------
+
+def _deltas_jax(N: jnp.ndarray, mu: jnp.ndarray):
+    colsum = N.sum(axis=0)                                   # (l,)
+    X = jnp.where(colsum > 0, (mu * N).sum(0) / jnp.maximum(colsum, 1), 0.0)
+    dplus = (mu - X[None, :]) / (colsum[None, :] + 1.0)      # (k, l)
+    single = colsum[None, :] <= 1
+    dm_reg = (X[None, :] - mu) / jnp.maximum(colsum[None, :] - 1.0, 1.0)
+    dminus = jnp.where(single, -mu, dm_reg)
+    dminus = jnp.where(N > 0, dminus, -jnp.inf)              # infeasible removes
+    return dplus, dminus
+
+
+def grin_solve_jax(mu: jnp.ndarray, n_tasks: jnp.ndarray,
+                   max_moves: int = 4096) -> jnp.ndarray:
+    """jit/vmap-able GrIn; returns the (k, l) placement as float32."""
+    mu = jnp.asarray(mu, dtype=jnp.float32)
+    k, l = mu.shape
+
+    # ---- Algorithm 1 init (vectorized) ----
+    top_row = jnp.argmax(mu, axis=0)                         # (l,)
+    claims = (top_row[None, :] == jnp.arange(k)[:, None])    # (k, l) bool
+    n_claimed = claims.sum(axis=1)                           # (l,) -> per row
+    # Rows with no claim fall back to their best-fit column.
+    bf = jax.nn.one_hot(jnp.argmax(mu, axis=1), l, dtype=bool)
+    eff = jnp.where((n_claimed == 0)[:, None], bf, claims)
+    # Seed one task on every claimed column, remainder on the slowest claimed.
+    mu_masked = jnp.where(eff, mu, jnp.inf)
+    slowest = jnp.argmin(mu_masked, axis=1)                  # (k,)
+    nt = jnp.asarray(n_tasks, dtype=jnp.float32)
+    # Seed at most n_tasks[row] ones per row over claimed columns, fastest
+    # first; the remainder goes to the slowest claimed column (Alg. 1).
+    order = jnp.argsort(-jnp.where(eff, mu, -jnp.inf), axis=1)
+    rank_of_col = jnp.argsort(order, axis=1).astype(jnp.float32)
+    seed = (eff & (rank_of_col < nt[:, None])).astype(jnp.float32)
+    rem = nt - seed.sum(axis=1)
+    N0 = seed + jax.nn.one_hot(slowest, l) * rem[:, None]
+
+    def x_sys(N):
+        colsum = N.sum(axis=0)
+        return jnp.where(colsum > 0, (mu * N).sum(0) / jnp.maximum(colsum, 1),
+                         0.0).sum()
+
+    def body(state):
+        N, _, moves = state
+        dplus, dminus = _deltas_jax(N, mu)
+        # gain[p, s, d] = dminus[p, s] + dplus[p, d], s != d
+        gain = dminus[:, :, None] + dplus[:, None, :]
+        eye = jnp.eye(l, dtype=bool)[None, :, :]
+        gain = jnp.where(eye, -jnp.inf, gain)
+        flat = jnp.argmax(gain)
+        p, s, d = jnp.unravel_index(flat, (k, l, l))
+        g = gain[p, s, d]
+        do = g > _TOL
+        upd = (jax.nn.one_hot(p, k)[:, None]
+               * (jax.nn.one_hot(d, l) - jax.nn.one_hot(s, l))[None, :])
+        N = jnp.where(do, N + upd, N)
+        return N, do, moves + do.astype(jnp.int32)
+
+    def cond(state):
+        _, improved, moves = state
+        return improved & (moves < max_moves)
+
+    N, _, _ = jax.lax.while_loop(cond, body, (N0, jnp.array(True), jnp.array(0)))
+    return N
+
+
+def grin_x_sys_jax(mu: jnp.ndarray, n_tasks: jnp.ndarray) -> jnp.ndarray:
+    N = grin_solve_jax(mu, n_tasks)
+    colsum = N.sum(axis=0)
+    return jnp.where(colsum > 0, (mu * N).sum(0) / jnp.maximum(colsum, 1), 0.0).sum()

@@ -1,0 +1,157 @@
+"""Task dispatchers: CAB, GrIn, and the classic baselines RD/BF/LB/JSQ
+(paper Sec. 5-6).
+
+A dispatcher sees a `SystemView` (current placement counts, per-processor
+backlog, affinity matrix) and picks the processor for an arriving task. The
+closed-network simulator (repro.sim) and the real-execution pools
+(repro.sched) both drive these objects.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.cab import cab_target_state
+from repro.core.grin import grin_solve
+
+
+@dataclasses.dataclass
+class SystemView:
+    """What a dispatcher may observe when routing one task."""
+
+    counts: np.ndarray        # (k, l) tasks currently resident per (type, proc)
+    backlog_work: np.ndarray  # (l,) total remaining service demand per proc
+    backlog_tasks: np.ndarray  # (l,) number of tasks queued/running per proc
+    mu: np.ndarray            # (k, l) affinity matrix
+
+
+class Dispatcher:
+    name = "base"
+
+    def reset(self, mu: np.ndarray, n_tasks: np.ndarray) -> None:  # noqa: D401
+        """Called once per run with the static problem description."""
+
+    def choose(self, task_type: int, view: SystemView,
+               rng: np.random.Generator) -> int:
+        raise NotImplementedError
+
+    def notify_type_counts(self, n_tasks: np.ndarray) -> None:
+        """Piecewise-closed operation: in-flight type mix changed."""
+
+
+class RandomDispatcher(Dispatcher):
+    """RD: uniform random processor."""
+
+    name = "RD"
+
+    def choose(self, task_type, view, rng):
+        return int(rng.integers(view.mu.shape[1]))
+
+
+class BestFitDispatcher(Dispatcher):
+    """BF: processor with the highest rate for this task type."""
+
+    name = "BF"
+
+    def choose(self, task_type, view, rng):
+        return int(np.argmax(view.mu[task_type]))
+
+
+class LoadBalancingDispatcher(Dispatcher):
+    """LB with perfect information: least remaining WORK in queue.
+
+    As in the paper, true task sizes are used (an upper bound on what an
+    estimating LB could achieve). Work is normalized by the processor's rate
+    for the work already enqueued (tracked by the simulator in backlog_work).
+    """
+
+    name = "LB"
+
+    def choose(self, task_type, view, rng):
+        return int(np.argmin(view.backlog_work))
+
+
+class JoinShortestQueueDispatcher(Dispatcher):
+    """JSQ: least number of resident tasks."""
+
+    name = "JSQ"
+
+    def choose(self, task_type, view, rng):
+        return int(np.argmin(view.backlog_tasks))
+
+
+class _TargetDispatcher(Dispatcher):
+    """Route toward a precomputed optimal placement N*: send an arriving
+    p-type task to the processor with the largest deficit N*[p, j] - N[p, j]
+    (ties broken by higher rate). Keeps the system pinned at S_max (Lemma 2).
+    Recomputes N* when the in-flight type mix changes (piecewise-closed)."""
+
+    def __init__(self):
+        self._target = None
+        self._mu = None
+        self._key = None
+
+    def _solve(self, mu: np.ndarray, n_tasks: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def reset(self, mu, n_tasks):
+        self._mu = np.asarray(mu, dtype=np.float64)
+        self._key = None
+        self.notify_type_counts(np.asarray(n_tasks))
+
+    def notify_type_counts(self, n_tasks):
+        key = tuple(int(x) for x in n_tasks)
+        if key != self._key:
+            self._key = key
+            self._target = self._solve(self._mu, np.asarray(n_tasks))
+
+    def choose(self, task_type, view, rng):
+        deficit = self._target[task_type] - view.counts[task_type]
+        best = np.flatnonzero(deficit == deficit.max())
+        if len(best) == 1:
+            return int(best[0])
+        return int(best[np.argmax(view.mu[task_type][best])])
+
+
+class CABDispatcher(_TargetDispatcher):
+    """CAB (two processor types): Table-1 optimal state."""
+
+    name = "CAB"
+
+    def _solve(self, mu, n_tasks):
+        return cab_target_state(mu, n_tasks)
+
+
+class GrInDispatcher(_TargetDispatcher):
+    """GrIn (any number of processor types)."""
+
+    name = "GrIn"
+
+    def _solve(self, mu, n_tasks):
+        return grin_solve(mu, n_tasks).N
+
+
+class FixedTargetDispatcher(_TargetDispatcher):
+    """Pin an externally computed placement (e.g. exhaustive Opt)."""
+
+    name = "Opt"
+
+    def __init__(self, target: np.ndarray):
+        super().__init__()
+        self._fixed = np.asarray(target, dtype=np.int64)
+
+    def _solve(self, mu, n_tasks):
+        return self._fixed
+
+
+ALL_BASELINES = (RandomDispatcher, BestFitDispatcher, LoadBalancingDispatcher,
+                 JoinShortestQueueDispatcher)
+
+
+def make_policies(kind: str = "2type") -> list[Dispatcher]:
+    base = [RandomDispatcher(), BestFitDispatcher(),
+            LoadBalancingDispatcher(), JoinShortestQueueDispatcher()]
+    if kind == "2type":
+        return [CABDispatcher()] + base
+    return [GrInDispatcher()] + base

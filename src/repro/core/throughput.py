@@ -1,0 +1,110 @@
+"""System-state throughput model (paper eq. 4 / 25-28).
+
+State N is a (k tasks x l processors) nonneg-integer matrix, N[i, j] = number
+of i-type tasks resident on processor j. Row sums are fixed (N_i tasks of each
+type). Under processor sharing, processor j completes work at rate
+
+    X_j = sum_i mu[i, j] * N[i, j] / sum_i N[i, j]      (0 if column empty)
+
+and the system throughput is X_sys = sum_j X_j. Lemma 2/3: the optimal policy
+keeps the system in argmax_N X_sys(N) regardless of task-size distribution and
+work-conserving processing order.
+
+Both NumPy (host scheduler) and JAX (vectorized / on-device) variants are
+provided; the JAX variant is used by vmapped state-space sweeps and property
+tests.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def column_throughputs(N: np.ndarray, mu: np.ndarray) -> np.ndarray:
+    """Per-processor throughput X_j (eq. 26). Empty columns contribute 0."""
+    N = np.asarray(N, dtype=np.float64)
+    mu = np.asarray(mu, dtype=np.float64)
+    col = N.sum(axis=0)
+    num = (mu * N).sum(axis=0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        X = np.where(col > 0, num / np.maximum(col, 1e-300), 0.0)
+    return X
+
+
+def system_throughput(N: np.ndarray, mu: np.ndarray) -> float:
+    """X_sys(N) (eq. 27/28)."""
+    return float(column_throughputs(N, mu).sum())
+
+
+def system_throughput_jax(N: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
+    """JAX version of X_sys; differentiable in mu, vmap-able over N."""
+    N = N.astype(jnp.float32)
+    col = N.sum(axis=0)
+    num = (mu * N).sum(axis=0)
+    return jnp.where(col > 0, num / jnp.maximum(col, 1.0), 0.0).sum()
+
+
+def state_from_pair(n11: int, n22: int, n1: int, n2: int) -> np.ndarray:
+    """2x2 state matrix from the (N11, N22) pair (paper Definition 5)."""
+    return np.array([[n11, n1 - n11], [n2 - n22, n22]], dtype=np.int64)
+
+
+def throughput_2x2(n11, n22, n1, n2, mu) -> float:
+    """X(N11, N22) closed form (paper eq. 4)."""
+    return system_throughput(state_from_pair(n11, n22, n1, n2), mu)
+
+
+def throughput_map_2x2(n1: int, n2: int, mu: np.ndarray) -> np.ndarray:
+    """Full X(S) surface over N11 in [0, n1] x N22 in [0, n2], vectorized.
+
+    Used for exhaustive 2x2 optimality checks and Table-1 validation. Shape
+    (n1+1, n2+1).
+    """
+    mu = jnp.asarray(mu, dtype=jnp.float32)
+    n11 = jnp.arange(n1 + 1, dtype=jnp.float32)
+    n22 = jnp.arange(n2 + 1, dtype=jnp.float32)
+
+    def x(a, b):
+        # Columns: P1 holds (a, n2-b); P2 holds (n1-a, b).
+        c1 = a + (n2 - b)
+        c2 = (n1 - a) + b
+        x1 = jnp.where(c1 > 0, (mu[0, 0] * a + mu[1, 0] * (n2 - b)) / jnp.maximum(c1, 1.0), 0.0)
+        x2 = jnp.where(c2 > 0, (mu[1, 1] * b + mu[0, 1] * (n1 - a)) / jnp.maximum(c2, 1.0), 0.0)
+        return x1 + x2
+
+    return np.asarray(jax.vmap(lambda a: jax.vmap(lambda b: x(a, b))(n22))(n11))
+
+
+def delta_x_add(N: np.ndarray, mu: np.ndarray, p: int) -> np.ndarray:
+    """X_df+ per processor: gain from ADDING one p-type task (eq. 33-34).
+
+    X_df+[j] = (mu[p, j] - X_j) / (sum_i N[i, j] + 1)
+    """
+    X = column_throughputs(N, mu)
+    col = np.asarray(N, dtype=np.float64).sum(axis=0)
+    return (np.asarray(mu, dtype=np.float64)[p] - X) / (col + 1.0)
+
+
+def delta_x_remove(N: np.ndarray, mu: np.ndarray, p: int) -> np.ndarray:
+    """X_df- per processor: change from REMOVING one p-type task (eq. 35-36).
+
+    X_df-[j] = (X_j - mu[p, j]) / (sum_i N[i, j] - 1); +inf where no p-task can
+    be removed (N[p, j] == 0). A singleton column (col == 1, removing empties
+    it) loses exactly mu[p, j]: the limit formula still applies with the
+    convention X_j(empty) = 0, i.e. delta = -mu_pj, handled explicitly.
+    """
+    N = np.asarray(N, dtype=np.float64)
+    mu = np.asarray(mu, dtype=np.float64)
+    X = column_throughputs(N, mu)
+    col = N.sum(axis=0)
+    out = np.full(N.shape[1], np.inf)
+    for j in range(N.shape[1]):
+        if N[p, j] <= 0:
+            continue
+        if col[j] <= 1:
+            out[j] = -mu[p, j]  # column becomes empty; we lose its whole rate
+        else:
+            out[j] = (X[j] - mu[p, j]) / (col[j] - 1.0)
+    return out

@@ -1,0 +1,111 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Backend dispatch:
+  * TPU        -> compiled Pallas kernels (the production path).
+  * elsewhere  -> pure-jnp chunked equivalents (repro.models.*) — identical
+                  math, bounded memory; this is what the CPU dry-run lowers.
+  * REPRO_PALLAS_INTERPRET=1 -> Pallas interpret mode (kernel-body tests).
+
+Wrappers normalize layouts ((B, S, H, dh) model layout <-> (BH, S, dh) kernel
+layout), pad head_dim/seq to hardware-aligned multiples, and unpad results.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, pad)
+    return jnp.pad(x, pads), pad
+
+
+def flash_attention(q, k, v, *, causal=True, window=0,
+                    block_q=128, block_k=128):
+    """Model-layout flash attention. q: (B, S, H, dh); k, v: (B, S, KV, dh)."""
+    if not (_use_pallas() or _interpret()):
+        from repro.models.attention import chunked_attention
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 chunk_q=block_q, chunk_k=block_k)
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    qk = q.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    kk = k.transpose(0, 2, 1, 3).reshape(b * kv, s, dh)
+    vk = v.transpose(0, 2, 1, 3).reshape(b * kv, s, dh)
+    qk, pad_d = _pad_to(qk, 128, 2)
+    kk, _ = _pad_to(kk, 128, 2)
+    vk, _ = _pad_to(vk, 128, 2)
+    qk, pad_s = _pad_to(qk, block_q, 1)
+    kk, _ = _pad_to(kk, block_k, 1)
+    vk, _ = _pad_to(vk, block_k, 1)
+    # padded q rows attend causally within padded keys; sliced away below.
+    out = flash_attention_pallas(qk, kk, vk, causal=causal, window=window,
+                                 block_q=block_q, block_k=block_k,
+                                 valid_k=s, scale=1.0 / (dh ** 0.5),
+                                 interpret=_interpret())
+    out = out[:, :s, :dh].reshape(b, h, s, dh).transpose(0, 2, 1, 3)
+    return out
+
+
+def ssd_scan(q, k, v, log_a, beta, *, chunk=256):
+    """Model-layout SSD. q, k: (B, S, H, dk); v: (B, S, H, dv);
+    log_a, beta: (B, S, H). Returns (y (B, S, H, dv), final_state)."""
+    if not (_use_pallas() or _interpret()):
+        from repro.models.linear_scan import linear_scan_chunked
+        return linear_scan_chunked(q, k, v, log_a, beta, chunk=chunk)
+    b, s, h, dk = k.shape
+    dv = v.shape[-1]
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(b * h, s, x.shape[-1])
+    fold2 = lambda x: x.transpose(0, 2, 1).reshape(b * h, s)
+    qk, kk, vk = fold(q), fold(k), fold(v)
+    la, bt = fold2(log_a), fold2(beta)
+    pad = (-s) % chunk
+    if pad:
+        qk, _ = _pad_to(qk, chunk, 1)
+        kk, _ = _pad_to(kk, chunk, 1)
+        vk, _ = _pad_to(vk, chunk, 1)
+        la = jnp.pad(la, ((0, 0), (0, pad)))          # log_a = 0 -> decay 1
+        bt = jnp.pad(bt, ((0, 0), (0, pad)))          # beta = 0 -> no input
+    y = ssd_scan_pallas(qk, kk, vk, la, bt, chunk=chunk,
+                        interpret=_interpret())
+    y = y[:, :s].reshape(b, h, s, dv).transpose(0, 2, 1, 3)
+    # Final state (decode handoff) via the closed form over the tail — cheap
+    # relative to the scan; only used by prefill.
+    from repro.models.linear_scan import linear_scan_chunked
+    _, state = linear_scan_chunked(q, k, v, log_a, beta, chunk=chunk)
+    return y, state
+
+
+def rmsnorm(x, w, *, eps=1e-5):
+    """x: (..., D); w: (D,)."""
+    if not (_use_pallas() or _interpret()):
+        from repro.kernels.ref import rmsnorm_ref
+        return rmsnorm_ref(x, w, eps)
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    x2, pad_r = _pad_to(x2, 256, 0)
+    block = 256 if x2.shape[0] % 256 == 0 else x2.shape[0]
+    out = rmsnorm_pallas(x2, w, eps=eps, block_rows=block,
+                         interpret=_interpret())
+    if pad_r:
+        out = out[:shape[0] if len(shape) == 2 else -pad_r or None]
+        out = out[: x.reshape(-1, shape[-1]).shape[0]]
+    return out.reshape(shape)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B, Sq, H, dh); k, v: (B, Sk, KV, dh). fp32 softmax, GQA."""
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    qg = q.reshape(b, sq, kv, h // kv, dh).astype(jnp.float32)
+    s = jnp.einsum("bsngd,btnd->bngst", qg, k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(dh))
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngst,btnd->bsngd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def ssd_scan_ref(q, k, v, log_a, beta):
+    """Sequential linear recurrence oracle.
+
+    q, k: (BH, S, dk); v: (BH, S, dv); log_a, beta: (BH, S).
+    S_t = exp(log_a_t) S_{t-1} + beta_t k_t v_t^T;  y_t = q_t @ S_t.
+    Returns y (BH, S, dv) and final state (BH, dk, dv).
+    """
+    bh, s, dk = k.shape
+    dv = v.shape[-1]
+
+    def step(S, x):
+        qt, kt, vt, lat, bt = x
+        S = jnp.exp(lat)[:, None, None] * S + bt[:, None, None] * (
+            kt[:, :, None] * vt[:, None, :])
+        return S, jnp.einsum("bk,bkv->bv", qt, S)
+
+    xs = (q.swapaxes(0, 1).astype(jnp.float32),
+          k.swapaxes(0, 1).astype(jnp.float32),
+          v.swapaxes(0, 1).astype(jnp.float32),
+          log_a.swapaxes(0, 1).astype(jnp.float32),
+          beta.swapaxes(0, 1).astype(jnp.float32))
+    S0 = jnp.zeros((bh, dk, dv), jnp.float32)
+    S, ys = jax.lax.scan(step, S0, xs)
+    return ys.swapaxes(0, 1).astype(v.dtype), S
+
+
+def rmsnorm_ref(x, w, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)

@@ -1,0 +1,318 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+# The two lines above MUST run before any jax import (device count locks at
+# first init). Everything below is ordinary.
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+single-pod 16x16 mesh and the 2x16x16 multi-pod mesh, recording
+memory_analysis, cost_analysis, and the HLO collective schedule.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch yi-6b] [--shape train_4k]
+      [--mesh single|multi|both] [--out reports/dryrun]
+"""
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, all_cells, get_arch, get_shape, shapes_for
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import (attach, batch_pspec, cache_pspec_tree,
+                                 resolve_microbatches)
+from repro.models.model import build_model, count_params
+from repro.parallel.sharding import (RULES_PREFILL_MULTI,
+                                     RULES_PREFILL_SINGLE,
+                                     RULES_PURE_DP_MULTI,
+                                     RULES_PURE_DP_SINGLE,
+                                     compute_param_specs,
+                                     param_pspec_tree, use_mesh)
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import TrainState, init_train_state, make_train_step
+
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "f8": 1, "s8": 1,
+          "u8": 1, "pred": 1}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_TYPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for tm in _TYPE_RE.finditer(type_str):
+        dt, dims = tm.groups()
+        base = _BYTES.get(dt[:4] if dt.startswith("f8") else dt, 4)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * base
+    return total
+
+
+def _parse_computations(hlo_text: str) -> dict:
+    """Split an HLO module dump into {computation_name: [lines]}."""
+    comps = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        if not line.startswith(" ") and line.rstrip().endswith("{"):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", line)
+            if m:
+                cur = "__entry__" if line.startswith("ENTRY") else m.group(1)
+                comps[cur] = []
+                continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line.strip())
+    return comps
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Loop-aware collective accounting over the compiled (SPMD) HLO.
+
+    Each collective contributes its OUTPUT bytes (per device), multiplied by
+    the trip counts of every enclosing `while` loop (layer scans, microbatch
+    accumulation, attention chunk scans). Trip counts are recovered from the
+    largest integer constant in the while condition computation — exact for
+    lax.scan-generated loops (condition is `iter < N`).
+    """
+    comps = _parse_computations(hlo_text)
+    coll_re = re.compile(
+        r"=\s*(\(?[\w\[\]{},/*\s]*?\)?)\s*(all-gather|all-reduce|"
+        r"reduce-scatter|all-to-all|collective-permute)(?:-start)?\(")
+    body_re = re.compile(r"body=%?([\w.\-]+)")
+    cond_re = re.compile(r"condition=%?([\w.\-]+)")
+    const_re = re.compile(r"constant\((\d+)\)")
+
+    def trip_count(cond_name: str) -> int:
+        consts = [int(c) for l in comps.get(cond_name, [])
+                  for c in const_re.findall(l)]
+        return max(consts) if consts else 1
+
+    memo = {}
+
+    def walk(name: str) -> dict:
+        if name in memo:
+            return memo[name]
+        acc = {k: 0.0 for k in _COLLECTIVES}
+        acc["counts"] = {k: 0 for k in _COLLECTIVES}
+        memo[name] = acc  # cycle guard
+        for line in comps.get(name, []):
+            cm = coll_re.search(line)
+            if cm and "-done(" not in line:
+                kind = cm.group(2)
+                acc[kind] += _shape_bytes(cm.group(1))
+                acc["counts"][kind] += 1
+            if " while(" in f" {line}":
+                bm, cn = body_re.search(line), cond_re.search(line)
+                if bm and cn:
+                    trips = trip_count(cn.group(1))
+                    sub = walk(bm.group(1))
+                    for k in _COLLECTIVES:
+                        acc[k] += trips * sub[k]
+                        acc["counts"][k] += sub["counts"][k]
+        return acc
+
+    entry = "__entry__" if "__entry__" in comps else None
+    result = walk(entry) if entry else {k: 0.0 for k in _COLLECTIVES}
+    out = {k: float(result.get(k, 0.0)) for k in _COLLECTIVES}
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = result.get("counts", {})
+    return out
+
+
+def _bf16_params(shapes):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if jnp.issubdtype(s.dtype, jnp.floating)
+            else s.dtype), shapes)
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, opt_cfg=None,
+               zero_stage=None, serve_tp_only=None, sharding_mode=None):
+    """Lower one (arch, shape) on `mesh`. Returns (lowered, info).
+
+    Perf knobs (EXPERIMENTS.md §Perf): `zero_stage` (3 = baseline ZeRO-3
+    per-layer-per-microbatch gathers, 2 = hoisted bf16 compute copy) and
+    `serve_tp_only` (serve params TP-only instead of fsdp-sharded). Defaults
+    from REPRO_ZERO_STAGE / REPRO_SERVE_TP_ONLY env (optimized: 2 / 1).
+    """
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    model = build_model(cfg)
+    opt_cfg = opt_cfg or OptimizerConfig()
+    if zero_stage is None:
+        zero_stage = int(os.environ.get("REPRO_ZERO_STAGE", "2"))
+    if serve_tp_only is None:
+        serve_tp_only = os.environ.get("REPRO_SERVE_TP_ONLY", "1") == "1"
+    if sharding_mode is None:
+        sharding_mode = os.environ.get("REPRO_SHARDING", "auto")
+    if sharding_mode == "auto":
+        # optimized default (§Perf iter 5): pure ZeRO-3 DP wins for single-pod
+        # train_4k (batch 256 == 256 chips); multi-pod (512 chips > batch)
+        # keeps 2D dp x tp so the pod axis still carries batch shards.
+        if shape.kind == "train" and "pod" not in mesh.axis_names:
+            sharding_mode = "pure_dp"
+        elif shape.kind == "prefill":
+            sharding_mode = "prefill_fsdp"
+        else:
+            sharding_mode = "2d"
+    info = {"arch": arch, "shape": shape_name,
+            "mesh": dict(mesh.shape), "kind": shape.kind,
+            "zero_stage": zero_stage, "serve_tp_only": serve_tp_only,
+            "sharding_mode": sharding_mode}
+    rules = None
+    dp_override = None
+    multi = "pod" in mesh.axis_names
+    if sharding_mode == "pure_dp" and shape.kind == "train":
+        rules = RULES_PURE_DP_MULTI if multi else RULES_PURE_DP_SINGLE
+        dp_override = rules["dp"]
+        zero_stage = 3               # compute copy must stay fully sharded
+        info["zero_stage"] = 3
+    if sharding_mode in ("pure_dp", "prefill_fsdp") and shape.kind == "prefill":
+        rules = RULES_PREFILL_MULTI if multi else RULES_PREFILL_SINGLE
+        dp_override = rules["dp"]
+        serve_tp_only = False        # params FSDP-sharded, gathered per layer
+        info["sharding_mode"] = "prefill_fsdp"
+        info["serve_tp_only"] = False
+
+    with use_mesh(mesh, rules):
+        if shape.kind == "train":
+            micro = resolve_microbatches(cfg, shape, mesh, dp=dp_override)
+            info["microbatches"] = micro
+            state_shapes = jax.eval_shape(
+                lambda: init_train_state(model, jax.random.PRNGKey(0), opt_cfg))
+            pspecs = param_pspec_tree(state_shapes.params)
+            opt_specs = {"m": pspecs, "v": pspecs, "step": P()}
+            state_specs = TrainState(params=pspecs, opt=opt_specs, step=P())
+            state_in = attach(mesh, state_shapes, state_specs)
+            batch_shapes = model.input_specs(shape)
+            batch_in = attach(mesh, batch_shapes,
+                              batch_pspec(cfg, shape, mesh, dp=dp_override))
+            fn = make_train_step(model, opt_cfg, microbatches=micro,
+                                 zero_stage=zero_stage)
+            lowered = jax.jit(fn).lower(state_in, batch_in)
+        elif shape.kind == "prefill":
+            param_shapes = _bf16_params(jax.eval_shape(
+                lambda: model.init(jax.random.PRNGKey(0))))
+            pfn = compute_param_specs if serve_tp_only else param_pspec_tree
+            params_in = attach(mesh, param_shapes, pfn(param_shapes))
+            batch_shapes = model.input_specs(shape)
+            batch_in = attach(mesh, batch_shapes,
+                              batch_pspec(cfg, shape, mesh, dp=dp_override))
+            fn = functools.partial(model.prefill, cache_len=shape.seq_len)
+            lowered = jax.jit(fn).lower(params_in, batch_in)
+        else:  # decode
+            param_shapes = _bf16_params(jax.eval_shape(
+                lambda: model.init(jax.random.PRNGKey(0))))
+            pfn = compute_param_specs if serve_tp_only else param_pspec_tree
+            params_in = attach(mesh, param_shapes, pfn(param_shapes))
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            cache_in = attach(mesh, cache_shapes,
+                              cache_pspec_tree(cfg, mesh, cache_shapes))
+            tok_shapes = model.input_specs(shape)
+            tok_in = attach(mesh, tok_shapes, batch_pspec(cfg, shape, mesh))
+            pos_in = jax.ShapeDtypeStruct((), jnp.int32,
+                                          sharding=NamedSharding(mesh, P()))
+            lowered = jax.jit(model.decode_step).lower(
+                params_in, tok_in["tokens"], cache_in, pos_in)
+    return lowered, info
+
+
+def run_cell(arch: str, shape_name: str, mesh, *, verbose=True) -> dict:
+    t0 = time.time()
+    lowered, info = lower_cell(arch, shape_name, mesh)
+    info["lower_s"] = round(time.time() - t0, 1)
+    t0 = time.time()
+    compiled = lowered.compile()
+    info["compile_s"] = round(time.time() - t0, 1)
+    try:
+        mem = compiled.memory_analysis()
+        info["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:  # noqa: BLE001
+        info["memory"] = {"error": str(e)}
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        info["cost"] = {k: float(v) for k, v in ca.items()
+                        if isinstance(v, (int, float))
+                        and k in ("flops", "bytes accessed",
+                                  "bytes accessed0{}", "utilization operand")
+                        or k == "flops" or "bytes accessed" in k}
+    except Exception as e:  # noqa: BLE001
+        info["cost"] = {"error": str(e)}
+    try:
+        info["collectives"] = collective_bytes(compiled.as_text())
+    except Exception:
+        info["collectives"] = collective_bytes(lowered.as_text())
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {tuple(mesh.shape.values())} "
+              f"lower={info['lower_s']}s compile={info['compile_s']}s "
+              f"flops={info['cost'].get('flops', 0):.3e} "
+              f"coll={info['collectives']['total']:.3e}B", flush=True)
+    return info
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", make_production_mesh(multi_pod=True)))
+
+    cells = []
+    for cfg, shp in all_cells():
+        if args.arch and cfg.name != args.arch:
+            continue
+        if args.shape and shp.name != args.shape:
+            continue
+        cells.append((cfg.name, shp.name))
+
+    failures = []
+    for mesh_name, mesh in meshes:
+        for arch, shp in cells:
+            out_path = os.path.join(args.out, f"{arch}__{shp}__{mesh_name}.json")
+            if os.path.exists(out_path):
+                print(f"[dryrun] skip existing {out_path}", flush=True)
+                continue
+            try:
+                info = run_cell(arch, shp, mesh)
+                info["status"] = "ok"
+            except Exception as e:  # noqa: BLE001
+                info = {"arch": arch, "shape": shp, "mesh": mesh_name,
+                        "status": "fail", "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-4000:]}
+                failures.append((arch, shp, mesh_name, str(e)))
+                print(f"[dryrun] FAIL {arch} x {shp} x {mesh_name}: {e}",
+                      flush=True)
+            with open(out_path, "w") as f:
+                json.dump(info, f, indent=1)
+    print(f"\n[dryrun] done; {len(failures)} failures")
+    for f_ in failures:
+        print("  FAIL:", f_)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Per-(arch x shape) runtime knobs: microbatch counts and sharding specs for
+batches and caches. All choices are recorded by the dry-run."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import dp_axes
+from repro.parallel.sharding import even_spec
+
+# Activation stash budget per device for the remat'd layer scan (bytes).
+_ACT_BUDGET = 4 << 30
+
+
+def resolve_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                         dp=None) -> int:
+    """Smallest power-of-two microbatch count whose per-layer residual stash
+    (B_local_micro x S x D x 2 bytes x n_layers) fits the activation budget."""
+    if shape.kind != "train":
+        return 1
+    if shape.microbatches:
+        return shape.microbatches
+    n_dp = math.prod(mesh.shape[a] for a in (dp or dp_axes(mesh)))
+    b_local = max(shape.global_batch // n_dp, 1)
+    layers = cfg.n_layers
+    n = 1
+    while n < b_local:
+        stash = (b_local // n) * shape.seq_len * cfg.d_model * 2 * layers
+        if stash <= _ACT_BUDGET:
+            break
+        n *= 2
+    return n
+
+
+def batch_pspec(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                dp=None) -> dict:
+    dp = dp or dp_axes(mesh)
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            spec = {"tokens": P(dp, None, None)}
+        else:
+            spec = {"tokens": P(dp, None)}
+        if shape.kind == "train":
+            spec["targets"] = spec["tokens"]
+        if cfg.family == "vlm":
+            spec["patch_embeds"] = P(dp, None, None)
+        return spec
+    # decode
+    if cfg.family == "audio":
+        return {"tokens": P(dp, None, None)}
+    return {"tokens": P(dp, None)}
+
+
+def cache_pspec_tree(cfg: ModelConfig, mesh, cache_shapes):
+    """PartitionSpecs for a cache pytree (by leaf name + rank).
+
+    Attention KV: heads over 'model' when divisible, else the sequence axis
+    (distributed flash-decoding; softmax reductions over the sharded axis
+    become cross-device reductions under SPMD). SSM states: heads / feature
+    dims over 'model'. Batch over dp everywhere.
+    """
+    dp = dp_axes(mesh)
+    tp = "model"
+    tp_size = mesh.shape["model"]
+
+    def spec(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        ndim = len(leaf.shape)
+        def lead(n_extra):  # leading stack dims (layer/group axes)
+            return (None,) * (ndim - n_extra)
+        if name in ("k", "v"):
+            # (..., B, Sc, KV, hd)
+            if cfg.n_kv_heads % tp_size == 0:
+                return P(*lead(4), dp, None, tp, None)
+            return P(*lead(4), dp, tp, None, None)
+        if name == "kpos":
+            return P(*lead(1), None)
+        if name == "idx":
+            return P(*lead(0))
+        if name == "state":     # (..., B, Hs, ds, hd)
+            hs_ok = cfg.n_ssm_heads % tp_size == 0
+            return P(*lead(4), dp, tp if hs_ok else None, None, None)
+        if name == "conv":      # (..., B, W-1, ch)
+            return P(*lead(3), dp, None, tp)
+        if name == "C":         # (..., B, H, dk, dv)
+            return P(*lead(4), dp, None, tp, None)
+        if name == "n":
+            if ndim >= 4:       # mlstm normalizer (..., B, H, dk, 1)
+                return P(*lead(4), dp, None, tp, None)
+            return P(*lead(2), dp, tp)
+        if name == "c":         # slstm (..., B, D)
+            return P(*lead(2), dp, tp)
+        return P(*((None,) * ndim))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+def attach(mesh, shape_tree, spec_tree):
+    """ShapeDtypeStructs with NamedShardings attached (lower() stand-ins).
+    Non-dividing spec axes are dropped (replicated) per even_spec."""
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(
+            s.shape, s.dtype,
+            sharding=NamedSharding(mesh, even_spec(p, s.shape, mesh))),
+        shape_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

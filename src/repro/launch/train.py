@@ -1,0 +1,107 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On real hardware this runs the full config on the production mesh; on this
+CPU container it runs a reduced (smoke) config on whatever devices exist —
+same code path: mesh, sharding rules, microbatched train step, checkpoints,
+recovery.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, smoke_config
+from repro.launch.mesh import dp_axes, make_debug_mesh, make_production_mesh
+from repro.models.model import build_model, count_params
+from repro.parallel.sharding import (named_sharding_tree, param_pspec_tree,
+                                     use_mesh)
+from repro.train import checkpoint as ckpt
+from repro.train.data import DataConfig, DataPipeline
+from repro.train.fault_tolerance import run_with_recovery
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import TrainState, init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="reduced config (the only option on CPU)")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="16x16 mesh (needs 256 devices)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    model = build_model(cfg)
+    print(f"[train] {cfg.name}: {count_params(cfg)/1e6:.1f}M params "
+          f"(family={cfg.family})")
+
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_debug_mesh())
+    print(f"[train] mesh: {dict(mesh.shape)}")
+    opt = OptimizerConfig(warmup_steps=10, decay_steps=args.steps)
+
+    with use_mesh(mesh):
+        state = init_train_state(model, jax.random.PRNGKey(0), opt)
+        shardings = named_sharding_tree(
+            mesh, jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state.params))
+        state = TrainState(
+            params=jax.tree.map(jax.device_put, state.params, shardings),
+            opt={"m": jax.tree.map(jax.device_put, state.opt["m"], shardings),
+                 "v": jax.tree.map(jax.device_put, state.opt["v"], shardings),
+                 "step": state.opt["step"]},
+            step=state.step)
+        step_fn = jax.jit(make_train_step(model, opt,
+                                          microbatches=args.microbatches))
+
+        dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                        global_batch=args.batch,
+                        n_codebooks=cfg.n_codebooks,
+                        n_patches=cfg.n_patches, d_model=cfg.d_model)
+
+        class Iter:
+            def __init__(self):
+                self.pipe = DataPipeline(dc)
+                self.i = 0
+
+            def __iter__(self):
+                return self
+
+            def __next__(self):
+                i, b = next(self.pipe)
+                return i, {k: jnp.asarray(v) for k, v in b.items()}
+
+            def seek(self, s):
+                pass  # deterministic by index already
+
+        def logged_step(s, batch):
+            t0 = time.time()
+            s, m = step_fn(s, batch)
+            if int(np.asarray(s.step)) % 10 == 0:
+                print(f"[train] step {int(np.asarray(s.step)):4d} "
+                      f"loss={float(m['loss']):.4f} "
+                      f"({time.time()-t0:.2f}s/step)", flush=True)
+            return s, m
+
+        state, steps, restarts = run_with_recovery(
+            logged_step, state, Iter(), ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every, max_steps=args.steps)
+    print(f"[train] done: {steps} steps, {restarts} restarts; "
+          f"checkpoints at {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

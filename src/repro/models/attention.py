@@ -1,0 +1,134 @@
+"""Attention implementations (pure JAX).
+
+Three tiers exist in this repo:
+  * `naive_attention`            — oracle, O(S^2) memory, tiny tests only.
+  * `chunked_attention` (here)   — online-softmax over KV chunks, bounded
+                                   memory; the default model path on CPU and
+                                   the dry-run lowering path. Mathematically
+                                   identical to flash attention.
+  * `repro.kernels.flash_attention` — Pallas TPU kernel (runtime path on TPU).
+
+All support GQA (H grouped over KV heads, no materialized head repeat),
+causality, and optional sliding windows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_reshape(q, n_kv):
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, q_offset=0):
+    """Oracle. q: (B,Sq,H,dh); k,v: (B,Sk,KV,dh). Returns (B,Sq,H,dh)."""
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    qg = _gqa_reshape(q, kv).astype(jnp.float32)
+    scores = jnp.einsum("bsngd,btnd->bngst", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngst,btnd->bsngd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                      chunk_q=1024, chunk_k=1024):
+    """Online-softmax attention, O(chunk_q * chunk_k) score memory.
+
+    Outer scan over query chunks, inner scan over KV chunks with running
+    (max, sum, acc) carry — the flash-attention recurrence in plain jnp.
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    kv = k.shape[2]
+    g = h // kv
+    cq = min(chunk_q, sq)
+    ck = min(chunk_k, sk)
+    # pad to multiples
+    pq = (-sq) % cq
+    pk = (-sk) % ck
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // cq, kp.shape[1] // ck
+
+    # leading axis = chunk index (scan axis)
+    qb = qp.reshape(b, nq, cq, kv, g, dh).transpose(1, 0, 2, 3, 4, 5).astype(jnp.float32)
+    kb = kp.reshape(b, nk, ck, kv, dh).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    vb = vp.reshape(b, nk, ck, kv, dh).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+
+    qpos_all = jnp.arange(nq * cq).reshape(nq, cq) + q_offset
+    kpos_all = jnp.arange(nk * ck).reshape(nk, ck)
+    k_valid = (kpos_all < sk)
+
+    def one_q_chunk(carry, xq):
+        qc, qpos = xq                              # (b,cq,kv,g,dh), (cq,)
+        m0 = jnp.full((b, cq, kv, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, cq, kv, g), jnp.float32)
+        a0 = jnp.zeros((b, cq, kv, g, dh), jnp.float32)
+
+        def step(state, xk):
+            m, l, acc = state
+            kc, vc, kpos, kval = xk
+            s = jnp.einsum("bcngd,btnd->bcngt", qc, kc) * scale  # (b,cq,kv,g,ck)
+            mask = jnp.broadcast_to(kval[None, :], (cq, ck))
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            if window:
+                mask = mask & (kpos[None, :] > qpos[:, None] - window)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bcngt,btnd->bcngd", p, vc)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                      (kb, vb, kpos_all, k_valid))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return carry, out
+
+    _, outs = jax.lax.scan(one_q_chunk, None, (qb, qpos_all))
+    # outs: (nq, b, cq, kv, g, dh) -> (b, sq, h, dh)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * cq, h, dh)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0, kpos=None):
+    """Single-step attention against a cache.
+
+    q: (B, 1, H, dh); caches: (B, S, KV, dh); pos: scalar current position
+    (number of tokens already cached). `kpos` optionally supplies the absolute
+    position of every cache slot (ring buffers); defaults to arange(S).
+    """
+    b, _, h, dh = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    qg = q.reshape(b, kv, h // kv, dh).astype(jnp.float32)
+    scores = jnp.einsum("bngd,btnd->bngt", qg, k_cache.astype(jnp.float32))
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    if kpos is None:
+        kpos = jnp.arange(s)
+    valid = (kpos >= 0) & (kpos <= pos)
+    if window:
+        valid &= kpos > pos - window
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngt,btnd->bngd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, dh).astype(q.dtype)

@@ -1,0 +1,110 @@
+"""Generic chunked linear-recurrence ("state space dual") primitive.
+
+Per head, with state S in R^{dk x dv}:
+
+    S_t = a_t * S_{t-1} + beta_t * k_t v_t^T          (a_t in (0, 1])
+    y_t = q_t @ S_t                                    -> R^{dv}
+
+Mamba2 maps (k=B_t, v=x_t, q=C_t, a=exp(dt*A), beta=dt); mLSTM maps
+(k, v, q, a=f_gate, beta=i_gate) and reuses the same primitive with dv=1 for
+its normalizer. Three tiers:
+
+  * `linear_scan_ref`     — sequential lax.scan oracle.
+  * `linear_scan_chunked` — chunked parallel form (intra-chunk attention-like
+                            + inter-chunk state scan); the model/dry-run path.
+  * `repro.kernels.ssd_scan` — Pallas TPU kernel of the same chunked form.
+
+Numerical stability: all decay products live in log space; every exp argument
+is a difference of cumulative logs ordered so that it is <= 0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(q, k, v, log_a, beta, s0=None):
+    """Sequential oracle.
+
+    q, k: (B, S, H, dk); v: (B, S, H, dv); log_a, beta: (B, S, H).
+    Returns y: (B, S, H, dv), final state (B, H, dk, dv).
+    """
+    b, s, h, dk = k.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dk, dv), f32)
+
+    def step(S, x):
+        qt, kt, vt, lat, bt = x
+        S = (jnp.exp(lat)[..., None, None] * S
+             + bt[..., None, None] * kt[..., :, None] * vt[..., None, :])
+        y = jnp.einsum("bhk,bhkv->bhv", qt, S)
+        return S, y
+
+    xs = (q.transpose(1, 0, 2, 3).astype(f32), k.transpose(1, 0, 2, 3).astype(f32),
+          v.transpose(1, 0, 2, 3).astype(f32), log_a.transpose(1, 0, 2).astype(f32),
+          beta.transpose(1, 0, 2).astype(f32))
+    S, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(v.dtype), S
+
+
+def linear_scan_step(q, k, v, log_a, beta, state):
+    """One decode step. q,k: (B,H,dk); v: (B,H,dv); log_a,beta: (B,H);
+    state: (B,H,dk,dv). Returns (y (B,H,dv), new_state)."""
+    f32 = jnp.float32
+    S = (jnp.exp(log_a.astype(f32))[..., None, None] * state
+         + beta.astype(f32)[..., None, None]
+         * k.astype(f32)[..., :, None] * v.astype(f32)[..., None, :])
+    y = jnp.einsum("bhk,bhkv->bhv", q.astype(f32), S)
+    return y.astype(v.dtype), S
+
+
+def linear_scan_chunked(q, k, v, log_a, beta, s0=None, chunk=256):
+    """Chunked parallel form; exact same math as the sequential oracle."""
+    b, s, h, dk = k.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        zf = lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+        q, k, v, beta = zf(q), zf(k), zf(v), zf(beta)
+        log_a = jnp.pad(log_a, [(0, 0), (0, pad), (0, 0)])  # a=1 on pad: log 0
+    n = q.shape[1] // c
+
+    def to_chunks(x):
+        # (B, S, H, ...) -> (n, B, c, H, ...) with chunk index leading (scan)
+        return x.reshape((b, n, c) + x.shape[2:]).swapaxes(0, 1).astype(f32)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    lac, bc = to_chunks(log_a), to_chunks(beta)
+
+    la_cum = jnp.cumsum(lac, axis=2)                  # (n, B, c, H) inclusive
+    la_tot = la_cum[:, :, -1]                          # (n, B, H)
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dk, dv), f32)
+
+    def chunk_step(S, xs):
+        qi, ki, vi, lci, lti, bi = xs
+        # intra-chunk: D[t, u] = exp(lc[t] - lc[u]) for u <= t else 0.
+        # Mask BEFORE exp: above-diagonal diffs are positive and can overflow
+        # to inf, which would poison gradients via 0 * inf = NaN.
+        diff = lci[:, :, None, :] - lci[:, None, :, :]          # (B, c, c, H)
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        dmat = jnp.exp(jnp.where(tri[None, :, :, None], diff, -1e30))
+        scores = jnp.einsum("bthk,buhk->btuh", qi, ki) * dmat    # (B,c,c,H)
+        y_intra = jnp.einsum("btuh,buh,buhv->bthv", scores, bi, vi)
+        # inter-chunk: y_t += exp(lc[t]) * q_t @ S_prev
+        y_inter = jnp.exp(lci)[..., None] * jnp.einsum("bthk,bhkv->bthv", qi, S)
+        # state update: S = exp(lt) * S + sum_u exp(lt - lc[u]) * b_u k_u v_u^T
+        w = jnp.exp(lti[:, None, :] - lci) * bi                  # (B, c, H)
+        S_new = (jnp.exp(lti)[..., None, None] * S
+                 + jnp.einsum("buh,buhk,buhv->bhkv", w, ki, vi))
+        return S_new, y_intra + y_inter
+
+    S, ys = jax.lax.scan(chunk_step, s0, (qc, kc, vc, la_cum, la_tot, bc))
+    y = ys.swapaxes(0, 1).reshape(b, n * c, h, dv)
+    # Padded tail has beta=0 and log_a=0, so the final state S is unaffected.
+    return y[:, :s].astype(v.dtype), S

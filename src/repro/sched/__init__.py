@@ -1,0 +1,7 @@
+"""Paper <-> framework bridge: heterogeneous pools + CAB/GrIn dispatch."""
+from repro.sched.baselines import BaselineClusterScheduler
+from repro.sched.cluster import (ChipSpec, HeterogeneousCluster, Pool,
+                                 PoolSpec, TaskRecord)
+from repro.sched.rates import (StepCost, affinity_from_roofline,
+                               serving_step_costs, step_time_roofline)
+from repro.sched.scheduler import ClusterScheduler, run_closed_loop

@@ -1,0 +1,144 @@
+"""ClusterScheduler: the paper's policy driving a real pool cluster.
+
+Keeps the live placement at the CAB/GrIn optimum (Lemma 2: stay in S_max):
+an arriving task of type p goes to the pool with the largest deficit
+N*[p, j] - N[p, j]. Piecewise-closed operation: when the in-flight class mix,
+the pool set (elastic), or the EWMA rates (stragglers) change, the target N*
+is re-solved — GrIn is O(k*l) per move, so re-solves are microseconds.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.core.cab import cab_target_state
+from repro.core.grin import grin_solve
+from repro.train.fault_tolerance import StragglerTracker
+
+
+class ClusterScheduler:
+    def __init__(self, mu: np.ndarray, policy: str = "grin",
+                 rate_alpha: float = 0.3, resolve_rate_rel_change: float = 0.25):
+        self.mu = np.asarray(mu, dtype=np.float64)
+        self.k, self.l = self.mu.shape
+        self.policy = policy
+        self.counts = np.zeros((self.k, self.l), dtype=np.int64)
+        self._target: np.ndarray | None = None
+        self._target_key = None
+        self._lock = threading.Lock()
+        self.tracker = StragglerTracker(self.l, alpha=rate_alpha)
+        self._resolve_threshold = resolve_rate_rel_change
+        self._base_mu = self.mu.copy()
+        self.resolves = 0
+
+    # ---------------- target maintenance ----------------
+    def _solve(self, n_tasks: np.ndarray) -> np.ndarray:
+        self.resolves += 1
+        if self.policy == "cab":
+            assert self.l == 2, "CAB is the two-pool analytical solution"
+            return cab_target_state(self.mu, n_tasks)
+        return grin_solve(self.mu, n_tasks).N
+
+    def _target_for(self, n_tasks: np.ndarray) -> np.ndarray:
+        key = (tuple(int(x) for x in n_tasks), self.mu.tobytes())
+        if key != self._target_key:
+            self._target = self._solve(n_tasks)
+            self._target_key = key
+        return self._target
+
+    # ---------------- routing ----------------
+    def route(self, task_type: int) -> int:
+        """Choose the pool for an arriving task; updates live counts."""
+        with self._lock:
+            n_tasks = self.counts.sum(axis=1)
+            n_tasks[task_type] += 1           # include the arriving task
+            target = self._target_for(n_tasks)
+            deficit = target[task_type] - self.counts[task_type]
+            best = np.flatnonzero(deficit == deficit.max())
+            j = int(best[np.argmax(self.mu[task_type][best])])
+            self.counts[task_type, j] += 1
+            return j
+
+    def complete(self, task_type: int, pool: int, service_s: float | None = None):
+        with self._lock:
+            self.counts[task_type, pool] -= 1
+            if service_s is not None:
+                expected = 1.0 / self._base_mu[task_type, pool]
+                self.tracker.observe(pool, expected / max(service_s, 1e-12))
+                self._maybe_refresh_rates()
+
+    # ---------------- stragglers / elastic ----------------
+    def _maybe_refresh_rates(self):
+        """Fold observed slowdowns into mu; re-solve on material change."""
+        factors = self.tracker.slowdown_factors()
+        new_mu = self._base_mu * factors[None, :]
+        rel = np.abs(new_mu - self.mu) / np.maximum(self.mu, 1e-12)
+        if rel.max() > self._resolve_threshold:
+            self.mu = new_mu
+            self._target_key = None            # force re-solve on next route
+
+    def pool_lost(self, pool: int):
+        """Elastic: a pool died; zero its column and re-solve. In-flight
+        tasks on the pool are the caller's to re-enqueue."""
+        with self._lock:
+            self.mu = np.delete(self.mu, pool, axis=1)
+            self._base_mu = np.delete(self._base_mu, pool, axis=1)
+            self.counts = np.delete(self.counts, pool, axis=1)
+            self.l -= 1
+            self._target_key = None
+            t = self.tracker
+            t.rates = np.delete(t.rates, pool)
+            t.seen = np.delete(t.seen, pool)
+
+    def pool_added(self, mu_column: np.ndarray):
+        with self._lock:
+            self.mu = np.concatenate([self.mu, mu_column[:, None]], axis=1)
+            self._base_mu = np.concatenate(
+                [self._base_mu, mu_column[:, None]], axis=1)
+            self.counts = np.concatenate(
+                [self.counts, np.zeros((self.k, 1), np.int64)], axis=1)
+            self.l += 1
+            self._target_key = None
+            t = self.tracker
+            t.rates = np.append(t.rates, 0.0)
+            t.seen = np.append(t.seen, False)
+
+
+def run_closed_loop(cluster, scheduler: ClusterScheduler, task_types,
+                    size_fn, duration_s: float, warmup_s: float = 0.5):
+    """Drive a closed system: N programs (one in-flight task each); on each
+    completion the program's next task enters immediately. Returns measured
+    throughput (tasks/s) after warmup."""
+    from repro.sched.cluster import TaskRecord
+
+    t_end = time.perf_counter() + duration_s
+    t_measure = time.perf_counter() + warmup_s
+    done = threading.Event()
+    stats = {"measured": 0}
+
+    def on_complete(pool_idx, rec):
+        scheduler.complete(rec.task_type, pool_idx,
+                           rec.finish_t - rec.start_t)
+        now = time.perf_counter()
+        if now >= t_measure:
+            stats["measured"] += 1
+        if now >= t_end:
+            done.set()
+            return
+        nxt = TaskRecord(task_type=rec.task_type, size=size_fn(rec.task_type),
+                         enqueue_t=now)
+        j = scheduler.route(nxt.task_type)
+        cluster.pools[j].submit(nxt)
+
+    cluster.on_complete(on_complete)
+    cluster.start()
+    for tt in task_types:
+        rec = TaskRecord(task_type=tt, size=size_fn(tt),
+                         enqueue_t=time.perf_counter())
+        j = scheduler.route(tt)
+        cluster.pools[j].submit(rec)
+    done.wait(timeout=duration_s + 10)
+    cluster.stop()
+    return stats["measured"] / max(duration_s - warmup_s, 1e-9)

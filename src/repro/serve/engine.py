@@ -1,0 +1,68 @@
+"""Batched serving engine: prefill + decode with a persistent cache.
+
+The engine is the unit the paper's scheduler dispatches: a `prefill` call or a
+`decode_run` (n greedy steps) is one "task"; pools (repro.sched.cluster) own
+one engine each and serve FCFS — mirroring the paper's real-platform setup
+(OpenCL contexts with one queue per device, Sec. 7.1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, max_len: int = 512):
+        self.model = model
+        self.cfg = model.cfg
+        self.max_len = max_len
+        # bf16 serving copy of the weights
+        self.params = jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16)
+            if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+        self._prefill = jax.jit(
+            functools.partial(model.prefill, cache_len=max_len))
+        self._decode = jax.jit(model.decode_step)
+
+    def prefill(self, batch: dict):
+        logits, cache = self._prefill(self.params, batch)
+        return logits, cache
+
+    def decode_run(self, first_token, cache, start_pos: int, steps: int):
+        """Greedy-decode `steps` tokens. Returns (tokens, cache)."""
+        tok = first_token
+        out = []
+        pos = start_pos
+        for _ in range(steps):
+            logits, cache = self._decode(self.params, tok, cache,
+                                         jnp.asarray(pos, jnp.int32))
+            if self.cfg.family == "audio":
+                nxt = jnp.argmax(logits[:, -1], axis=-1)      # (B, K)
+                tok = nxt[:, :, None].astype(jnp.int32)
+            else:
+                nxt = jnp.argmax(logits[:, -1], axis=-1)      # (B,)
+                tok = nxt[:, None].astype(jnp.int32)
+            out.append(nxt)
+            pos += 1
+        return jnp.stack(out, axis=1), cache
+
+    def generate(self, batch: dict, steps: int):
+        """prefill + greedy decode; returns generated token ids."""
+        logits, cache = self.prefill(batch)
+        if self.cfg.family == "audio":
+            first = jnp.argmax(logits[:, -1], -1)[:, :, None].astype(jnp.int32)
+            start = batch["tokens"].shape[-1]
+        else:
+            first = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            start = batch["tokens"].shape[1]
+            if self.cfg.family == "vlm" and "patch_embeds" in batch:
+                start += batch["patch_embeds"].shape[1]
+        toks, cache = self.decode_run(first, cache, start, steps - 1)
+        first_axis = first[:, None] if self.cfg.family != "audio" else first[:, None, :, 0]
+        return jnp.concatenate([
+            first[:, None, ...].reshape(toks.shape[0], 1, *toks.shape[2:]),
+            toks], axis=1)

@@ -1,0 +1,7 @@
+"""Discrete-event simulator of the paper's closed batch network."""
+from repro.sim.distributions import (BoundedPareto, Constant, Exponential,
+                                     TaskSizeDistribution, Uniform,
+                                     make_distribution, DISTRIBUTIONS)
+from repro.sim.simulator import ClosedNetworkSimulator, SimConfig, SimMetrics
+
+__all__ = [s for s in dir() if not s.startswith("_")]

@@ -1,0 +1,209 @@
+"""Discrete-event simulator of the closed batch network (paper Figs. 2, 4-12).
+
+Model: N programs; each program is an endless sequence of tasks. The system
+always holds exactly N in-flight tasks; when a task completes, the program's
+next task enters immediately and the dispatcher routes it (closed system).
+
+Processing orders (both work-conserving, per Lemma 3):
+  * PS   — processor j serves its n_j resident tasks simultaneously; each
+           task's remaining "alone time" r = s / mu[i, j] depletes at rate
+           1 / n_j wall-seconds per second.
+  * FCFS — head-of-line task runs at full rate; the rest wait.
+
+Energy: a size-s i-type task on processor j occupies the processor for
+s / mu[i, j] dedicated seconds in either order, so task energy is
+P[i, j] * s / mu[i, j] (paper Sec. 5: execution time, NOT response time).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.affinity import PowerModel, PROPORTIONAL_POWER
+from repro.core.policies import Dispatcher, SystemView
+from repro.sim.distributions import TaskSizeDistribution
+
+_INF = float("inf")
+
+
+@dataclasses.dataclass
+class SimConfig:
+    mu: np.ndarray                      # (k, l) affinity matrix
+    n_programs_per_type: np.ndarray     # (k,) programs whose tasks are type i
+    distribution: TaskSizeDistribution
+    order: str = "PS"                   # "PS" | "FCFS"
+    power: PowerModel = dataclasses.field(default_factory=lambda: PROPORTIONAL_POWER)
+    n_completions: int = 20_000
+    warmup_completions: int = 2_000
+    seed: int = 0
+    # If set, each new task's type is re-drawn iid with these probabilities
+    # (piecewise-closed operation; dispatchers are notified of mix changes).
+    type_mix: np.ndarray | None = None
+
+
+@dataclasses.dataclass
+class SimMetrics:
+    throughput: float                   # X_sim (tasks / sec)
+    mean_response_time: float           # E[T_sim]
+    mean_energy: float                  # E[E_sim]
+    edp: float                          # E[E_sim] * E[T_sim]
+    little_product: float               # X_sim * E[T_sim]  (should be ~N)
+    completed: int
+    elapsed: float
+    state_occupancy: np.ndarray         # time-averaged N_ij
+
+
+class ClosedNetworkSimulator:
+    """Event-driven closed network; O(N) per completion event."""
+
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        self.mu = np.asarray(cfg.mu, dtype=np.float64)
+        self.k, self.l = self.mu.shape
+        self.P = cfg.power.power_matrix(self.mu)
+
+    def run(self, dispatcher: Dispatcher) -> SimMetrics:
+        cfg = self.cfg
+        rng = np.random.default_rng(cfg.seed)
+        n_per_type = np.asarray(cfg.n_programs_per_type, dtype=np.int64)
+        n_prog = int(n_per_type.sum())
+
+        # Per in-flight task state (one task per program).
+        task_type = np.repeat(np.arange(self.k), n_per_type)
+        if cfg.type_mix is not None:
+            task_type = rng.choice(self.k, size=n_prog, p=cfg.type_mix)
+        task_proc = np.full(n_prog, -1, dtype=np.int64)
+        remaining = np.zeros(n_prog)        # alone-seconds of service left
+        size_left = np.zeros(n_prog)        # work units left (for LB view)
+        entry_time = np.zeros(n_prog)
+        service_need = np.zeros(n_prog)     # total alone-seconds (for energy)
+
+        counts = np.zeros((self.k, self.l), dtype=np.int64)
+        proc_tasks: list[list[int]] = [[] for _ in range(self.l)]  # FCFS order
+
+        dispatcher.reset(self.mu, n_per_type if cfg.type_mix is None
+                         else np.bincount(task_type, minlength=self.k))
+
+        def view() -> SystemView:
+            backlog_work = np.zeros(self.l)
+            backlog_tasks = np.zeros(self.l)
+            for j in range(self.l):
+                ids = proc_tasks[j]
+                backlog_tasks[j] = len(ids)
+                if ids:
+                    backlog_work[j] = size_left[np.asarray(ids)].sum()
+            return SystemView(counts=counts, backlog_work=backlog_work,
+                              backlog_tasks=backlog_tasks, mu=self.mu)
+
+        def admit(pid: int, now: float) -> None:
+            t = int(task_type[pid])
+            j = dispatcher.choose(t, view(), rng)
+            s = float(cfg.distribution.sample(rng, 1)[0])
+            task_proc[pid] = j
+            service_need[pid] = s / self.mu[t, j]
+            remaining[pid] = service_need[pid]
+            size_left[pid] = s
+            entry_time[pid] = now
+            counts[t, j] += 1
+            proc_tasks[j].append(pid)
+
+        for pid in range(n_prog):
+            admit(pid, 0.0)
+
+        now = 0.0
+        completed = 0
+        measured = 0
+        t_measure_start = 0.0
+        sum_resp = 0.0
+        sum_energy = 0.0
+        occupancy = np.zeros((self.k, self.l))
+        occ_t0 = None
+
+        while completed < cfg.n_completions:
+            # ---- find next completion ----
+            best_dt, best_j = _INF, -1
+            for j in range(self.l):
+                ids = proc_tasks[j]
+                if not ids:
+                    continue
+                if cfg.order == "PS":
+                    arr = remaining[np.asarray(ids)]
+                    dt = arr.min() * len(ids)
+                else:  # FCFS: head of line runs alone
+                    dt = remaining[ids[0]]
+                if dt < best_dt:
+                    best_dt, best_j = dt, j
+            assert best_j >= 0, "no runnable tasks — system cannot be empty"
+
+            # ---- advance time & deplete ----
+            if occ_t0 is not None:
+                occupancy += counts * best_dt
+            now += best_dt
+            j = best_j
+            for jj in range(self.l):
+                ids = proc_tasks[jj]
+                if not ids:
+                    continue
+                idx = np.asarray(ids)
+                if cfg.order == "PS":
+                    dep = best_dt / len(ids)
+                    remaining[idx] -= dep
+                    # size depletes proportionally to service received
+                    frac = np.zeros(len(idx))
+                    nz = service_need[idx] > 0
+                    frac[nz] = dep / service_need[idx][nz]
+                    size_left[idx] = np.maximum(
+                        size_left[idx] - frac * size_left[idx], 0.0)
+                else:
+                    remaining[ids[0]] -= best_dt
+                    # head's size depletes linearly
+                    if service_need[ids[0]] > 0:
+                        size_left[ids[0]] = max(
+                            size_left[ids[0]]
+                            - best_dt / service_need[ids[0]] * size_left[ids[0]],
+                            0.0)
+
+            # ---- complete the finished task on processor j ----
+            if cfg.order == "PS":
+                ids = np.asarray(proc_tasks[j])
+                pid = int(ids[np.argmin(remaining[ids])])
+            else:
+                pid = proc_tasks[j][0]
+            t = int(task_type[pid])
+            proc_tasks[j].remove(pid)
+            counts[t, j] -= 1
+            completed += 1
+
+            in_window = completed > cfg.warmup_completions
+            if completed == cfg.warmup_completions:
+                t_measure_start = now
+                occ_t0 = now
+                occupancy[:] = 0.0
+            if in_window:
+                measured += 1
+                sum_resp += now - entry_time[pid]
+                sum_energy += self.P[t, j] * service_need[pid]
+
+            # ---- the program's next task enters immediately (closed) ----
+            if cfg.type_mix is not None:
+                task_type[pid] = rng.choice(self.k, p=cfg.type_mix)
+                dispatcher.notify_type_counts(
+                    np.bincount(task_type, minlength=self.k))
+            admit(pid, now)
+
+        elapsed = now - t_measure_start
+        x = measured / elapsed if elapsed > 0 else 0.0
+        et = sum_resp / measured if measured else _INF
+        ee = sum_energy / measured if measured else _INF
+        occ = occupancy / max(elapsed, 1e-12)
+        return SimMetrics(throughput=x, mean_response_time=et, mean_energy=ee,
+                          edp=ee * et, little_product=x * et,
+                          completed=measured, elapsed=elapsed,
+                          state_occupancy=occ)
+
+
+def run_policy_sweep(cfg: SimConfig, dispatchers) -> dict[str, SimMetrics]:
+    """Run the same workload under each dispatcher (same seed => same sizes)."""
+    sim = ClosedNetworkSimulator(cfg)
+    return {d.name: sim.run(d) for d in dispatchers}

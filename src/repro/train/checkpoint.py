@@ -1,0 +1,89 @@
+"""Checkpointing: atomic, keep-last-k, optional async; no orbax dependency.
+
+Layout:  <dir>/step_<n>/arrays.npz + tree.json  (+ .tmp staging, atomic
+rename). `save` flattens any pytree with jax.tree_util key paths; `restore`
+rebuilds the exact structure. Works with sharded arrays (gathers to host —
+adequate for the CPU container; on a real pod each process would write its
+own shard file, same layout with a process suffix).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(directory: str, step: int, tree, keep: int = 3,
+         async_: bool = False) -> threading.Thread | None:
+    """Write checkpoint for `step`. Returns the writer thread if async."""
+
+    def _write():
+        os.makedirs(directory, exist_ok=True)
+        final = os.path.join(directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten(tree)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        treedef = jax.tree_util.tree_structure(tree)
+        with open(os.path.join(tmp, "tree.json"), "w") as f:
+            json.dump({"step": step, "treedef": str(treedef),
+                       "keys": sorted(flat)}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                     # atomic publish
+        _gc(directory, keep)
+
+    if async_:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d))
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, template, step: int | None = None):
+    """Restore into the structure of `template` (shapes must match)."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_t = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for kp, leaf in flat_t[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in kp)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(flat_t[1], leaves), step

@@ -1,0 +1,113 @@
+"""Train step factory: microbatched gradient accumulation + AdamW.
+
+`make_train_step(model, opt_cfg, microbatches)` returns a pure
+`train_step(state, batch) -> (state, metrics)` suitable for jit/pjit. The
+global batch is split into `microbatches` slices scanned sequentially
+(gradient accumulation) — this is what bounds activation memory at
+train_4k x 30B scale; each microbatch's forward is remat'd per layer inside
+the model's scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.parallel.sharding import constrain
+from repro.train.optimizer import (OptimizerConfig, apply_updates,
+                                   init_opt_state)
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: Any
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten, TrainState.tree_unflatten)
+
+
+def init_train_state(model: Model, key, opt_cfg: OptimizerConfig) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=init_opt_state(params, opt_cfg),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def _split_micro(batch: dict, n: int) -> dict:
+    """(B, ...) -> (n, B/n, ...), keeping the microbatch shards on 'dp'."""
+    def f(x):
+        b = x.shape[0]
+        assert b % n == 0, f"global batch {b} not divisible by {n} microbatches"
+        xm = x.reshape((n, b // n) + x.shape[1:])
+        return constrain(xm, None, "dp", *([None] * (x.ndim - 1)))
+    return jax.tree.map(f, batch)
+
+
+def make_train_step(model: Model, opt_cfg: OptimizerConfig,
+                    microbatches: int = 1, zero_stage: int = 2):
+    """zero_stage=3: fp32 master params are used directly (fully sharded;
+    XLA re-gathers per layer per microbatch). zero_stage=2 (default,
+    EXPERIMENTS.md §Perf iteration 1): a bf16 TP-only-sharded compute copy is
+    materialized ONCE per step outside the microbatch scan — one weight
+    gather per step instead of ~3 x microbatches, and remat recomputes no
+    gathers. Master params + optimizer state stay fully (fsdp x tp) sharded
+    either way."""
+
+    def loss_fn(params_c, micro):
+        loss, metrics = model.loss(params_c, micro)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: dict):
+        if zero_stage == 2:
+            from repro.parallel.sharding import cast_and_reshard_compute_params
+            params_c = cast_and_reshard_compute_params(
+                state.params, dtype=jnp.dtype(model.cfg.dtype))
+        else:
+            # ZeRO-3: keep full (fsdp x tp) sharding; cast to the compute
+            # dtype so per-layer gathers move bf16, not fp32 masters.
+            dt = jnp.dtype(model.cfg.dtype)
+            params_c = jax.tree.map(
+                lambda x: x.astype(dt)
+                if jnp.issubdtype(x.dtype, jnp.floating) else x, state.params)
+
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params_c, batch)
+        else:
+            micro = _split_micro(batch, microbatches)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                state.params)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params_c, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            (g_sum, l_sum), _ = jax.lax.scan(acc_step, (zero, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / microbatches, g_sum)
+            loss = l_sum / microbatches
+            metrics = {}
+
+        new_params, new_opt, opt_metrics = apply_updates(
+            state.params, grads, state.opt, opt_cfg)
+        new_state = TrainState(params=new_params, opt=new_opt,
+                               step=state.step + 1)
+        out = {"loss": loss, **opt_metrics}
+        return new_state, out
+
+    return train_step

@@ -1,0 +1,12 @@
+import os
+
+# Tests must see the single real CPU device (the dry-run sets its own flags
+# in a separate process); keep XLA_FLAGS free of forced device counts here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "repro", max_examples=25, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+settings.load_profile("repro")

@@ -1,0 +1,92 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import pytest as _pytest
+
+
+@_pytest.fixture(autouse=True)
+def _interpret_mode(monkeypatch):
+    """Route ops.* through the Pallas kernels in interpret mode — scoped per
+    test so other modules keep the pure-jnp CPU path."""
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ref import (flash_attention_ref, rmsnorm_ref, ssd_scan_ref)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("b,s,h,kv,dh", [
+    (1, 128, 4, 4, 128),     # MHA aligned
+    (2, 200, 8, 2, 96),      # GQA, padded seq + head_dim
+    (2, 300, 6, 1, 64),      # MQA
+    (1, 64, 4, 2, 112),      # zamba2-like head_dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [0, 50])
+def test_flash_attention_sweep(b, s, h, kv, dh, dtype, window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, dh), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, dh), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=64, block_k=64)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    tol = 5e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("b,s,h,dk,dv,chunk", [
+    (2, 130, 3, 16, 32, 32),
+    (1, 64, 2, 64, 64, 16),
+    (2, 96, 4, 8, 128, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_sweep(b, s, h, dk, dv, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (b, s, h, dk), dtype)
+    k = jax.random.normal(ks[1], (b, s, h, dk), dtype)
+    v = jax.random.normal(ks[2], (b, s, h, dv), dtype)
+    log_a = -jax.nn.softplus(jax.random.normal(ks[3], (b, s, h))).astype(jnp.float32)
+    beta = jax.nn.sigmoid(jax.random.normal(ks[4], (b, s, h))).astype(jnp.float32)
+    y, _ = ops.ssd_scan(q, k, v, log_a, beta, chunk=chunk)
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(b * h, s, x.shape[-1])
+    fold2 = lambda x: x.transpose(0, 2, 1).reshape(b * h, s)
+    yr, _ = ssd_scan_ref(fold(q).astype(jnp.float32), fold(k).astype(jnp.float32),
+                         fold(v).astype(jnp.float32), fold2(log_a), fold2(beta))
+    yr = yr.reshape(b, h, s, dv).transpose(0, 2, 1, 3)
+    tol = 2e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("shape", [(64, 256), (2, 37, 256), (5, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    x = jax.random.normal(KEY, shape, dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (shape[-1],)) * 0.1
+    out = ops.rmsnorm(x, w)
+    ref = rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=2e-2, rtol=2e-2)
+
+
+def test_ssd_final_state_matches_ref():
+    b, s, h, dk, dv = 1, 64, 2, 8, 16
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (b, s, h, dk))
+    k = jax.random.normal(ks[1], (b, s, h, dk))
+    v = jax.random.normal(ks[2], (b, s, h, dv))
+    log_a = -jax.nn.softplus(jax.random.normal(ks[3], (b, s, h)))
+    beta = jax.nn.sigmoid(jax.random.normal(ks[4], (b, s, h)))
+    _, state = ops.ssd_scan(q, k, v, log_a, beta, chunk=16)
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(b * h, s, x.shape[-1])
+    fold2 = lambda x: x.transpose(0, 2, 1).reshape(b * h, s)
+    _, sr = ssd_scan_ref(fold(q), fold(k), fold(v), fold2(log_a), fold2(beta))
+    np.testing.assert_allclose(np.asarray(state).reshape(b * h, dk, dv),
+                               np.asarray(sr), atol=1e-4, rtol=1e-4)

@@ -1,0 +1,113 @@
+"""Scheduler integration: routing keeps S_max, stragglers, elasticity,
+virtual-time cluster invariants."""
+import numpy as np
+import pytest
+
+from repro.core import cab_solve, grin_solve
+from repro.sched import BaselineClusterScheduler, ClusterScheduler
+from repro.sched.rates import (affinity_from_roofline, serving_step_costs,
+                               step_time_roofline)
+from repro.sched.cluster import ChipSpec
+from repro.sched.virtual import VirtualTimeCluster
+
+MU = np.array([[20.0, 15.0], [3.0, 8.0]])
+
+
+def test_routing_reaches_smax():
+    sched = ClusterScheduler(MU, policy="cab")
+    for _ in range(10):
+        sched.route(0)
+    for _ in range(10):
+        sched.route(1)
+    target = cab_solve(MU, 10, 10).state
+    np.testing.assert_array_equal(sched.counts, target)
+
+
+def test_grin_routing_converges_under_churn():
+    """Initial arrivals may land in a transient placement; under steady-state
+    churn (complete + re-admit, the closed-system dynamics) deficit routing
+    converges to the GrIn target."""
+    rng = np.random.default_rng(0)
+    mu = rng.uniform(1, 30, size=(3, 4))
+    sched = ClusterScheduler(mu, policy="grin")
+    nt = np.array([5, 7, 4])
+    for i, n in enumerate(nt):
+        for _ in range(n):
+            sched.route(i)
+    assert np.array_equal(sched.counts.sum(axis=1), nt)
+    for _ in range(200):   # churn: a random resident task completes, next enters
+        occupied = np.argwhere(sched.counts > 0)
+        t, j = occupied[rng.integers(len(occupied))]
+        sched.complete(int(t), int(j))
+        sched.route(int(t))
+    from repro.core import system_throughput
+    x_routed = system_throughput(sched.counts, mu)
+    x_grin = grin_solve(mu, nt).x_sys
+    assert x_routed >= 0.95 * x_grin
+
+
+def test_straggler_migration():
+    """A 3x-slow pool loses load after EWMA re-solve."""
+    sched = ClusterScheduler(MU, policy="cab", resolve_rate_rel_change=0.2)
+    for _ in range(10):
+        sched.route(0)
+    for _ in range(10):
+        sched.route(1)
+    before = sched.counts[:, 1].sum()
+    # pool 1 observed 3x slower than nominal for its tasks
+    for _ in range(10):
+        sched.complete(1, 1, service_s=3.0 / MU[1, 1])
+        sched.route(1)
+    assert sched.mu[0, 1] < MU[0, 1]     # column degraded
+    assert sched.resolves >= 2           # re-solved after threshold
+
+
+def test_elastic_pool_loss_and_gain():
+    rng = np.random.default_rng(1)
+    mu = rng.uniform(1, 30, size=(2, 3))
+    sched = ClusterScheduler(mu, policy="grin")
+    sched.route(0)
+    sched.pool_lost(2)
+    assert sched.mu.shape == (2, 2)
+    j = sched.route(1)
+    assert j in (0, 1)
+    sched.pool_added(np.array([5.0, 5.0]))
+    assert sched.mu.shape == (2, 3)
+    assert sched.route(0) in (0, 1, 2)
+
+
+def test_virtual_cluster_littles_law_and_cab_optimality():
+    """Pure-simulation mode: deterministic service times = 1/mu."""
+    fns = [{0: lambda s: 1 / MU[0, 0], 1: lambda s: 1 / MU[1, 0]},
+           {0: lambda s: 1 / MU[0, 1], 1: lambda s: 1 / MU[1, 1]}]
+    types = [0] * 10 + [1] * 10
+    res = {}
+    for name, sched in [("CAB", ClusterScheduler(MU, policy="cab")),
+                        ("LB", BaselineClusterScheduler(MU, "LB")),
+                        ("JSQ", BaselineClusterScheduler(MU, "JSQ"))]:
+        vc = VirtualTimeCluster(fns, measure_real=False)
+        m = vc.run_closed(sched, types, n_completions=1200, warmup=200)
+        assert m.little_product == pytest.approx(20, rel=0.1), name
+        res[name] = m.throughput
+    theory = cab_solve(MU, 10, 10).x_max
+    assert res["CAB"] == pytest.approx(theory, rel=0.06)
+    assert res["CAB"] >= max(res.values()) * 0.99
+
+
+def test_roofline_rates_orderings():
+    """Prefill is compute-affine, decode is bandwidth-affine: a high-BW pool
+    must win decode, a high-FLOPs pool must win prefill."""
+    compute_chip = ChipSpec("fat-mxu", peak_flops=400e12, hbm_bw=600e9)
+    bw_chip = ChipSpec("fat-hbm", peak_flops=100e12, hbm_bw=3000e9)
+    costs = serving_step_costs(n_params=7e9, seq_len=8192, batch=8)
+    mu = affinity_from_roofline(costs, [(compute_chip, 16), (bw_chip, 16)])
+    assert mu[0, 0] > mu[0, 1]   # prefill prefers compute pool
+    assert mu[1, 1] > mu[1, 0]   # decode prefers bandwidth pool
+
+
+def test_step_time_roofline_terms():
+    from repro.sched.rates import StepCost
+    chip = ChipSpec(peak_flops=100e12, hbm_bw=1000e9, link_bw=50e9)
+    c = StepCost("x", flops=200e12, hbm_bytes=500e9, collective_bytes=0)
+    # compute term: 200e12/(1*100e12*0.5) = 4s; memory: 0.5s -> compute-bound
+    assert step_time_roofline(c, chip, 1) == pytest.approx(4.0)

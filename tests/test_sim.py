@@ -1,0 +1,78 @@
+"""Simulator invariants: Little's law, theory-vs-sim, processing-order
+independence (Lemma 3), distribution means."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CABDispatcher, cab_solve, make_policies
+from repro.sim import (ClosedNetworkSimulator, SimConfig, make_distribution,
+                       DISTRIBUTIONS)
+
+MU = np.array([[20.0, 15.0], [3.0, 8.0]])
+
+
+def _cfg(**kw):
+    base = dict(mu=MU, n_programs_per_type=np.array([10, 10]),
+                distribution=make_distribution("exponential"), order="PS",
+                n_completions=3000, warmup_completions=600, seed=0)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def test_distribution_means_are_one():
+    rng = np.random.default_rng(0)
+    for name in DISTRIBUTIONS:
+        d = make_distribution(name)
+        assert d.sample(rng, 40_000).mean() == pytest.approx(1.0, rel=0.06), name
+
+
+@given(st.sampled_from(["exponential", "uniform", "constant"]),
+       st.integers(2, 18))
+@settings(max_examples=8)
+def test_littles_law(dist, n1):
+    """X * E[T] == N for ANY policy and distribution (Little's law)."""
+    cfg = _cfg(distribution=make_distribution(dist),
+               n_programs_per_type=np.array([n1, 20 - n1]),
+               n_completions=2500, warmup_completions=500)
+    m = ClosedNetworkSimulator(cfg).run(CABDispatcher())
+    assert m.little_product == pytest.approx(20, rel=0.08)
+
+
+def test_cab_matches_theory():
+    sol = cab_solve(MU, 10, 10)
+    m = ClosedNetworkSimulator(_cfg(n_completions=6000)).run(CABDispatcher())
+    assert m.throughput == pytest.approx(sol.x_max, rel=0.05)
+
+
+def test_cab_beats_all_policies():
+    sim = ClosedNetworkSimulator(_cfg())
+    xs = {d.name: sim.run(d).throughput for d in make_policies("2type")}
+    assert xs["CAB"] >= max(xs.values()) * 0.98
+
+
+def test_order_independence_lemma3():
+    """PS and FCFS give the same CAB time-average throughput."""
+    x_ps = ClosedNetworkSimulator(_cfg(order="PS")).run(CABDispatcher())
+    x_fcfs = ClosedNetworkSimulator(_cfg(order="FCFS")).run(CABDispatcher())
+    assert x_ps.throughput == pytest.approx(x_fcfs.throughput, rel=0.06)
+
+
+def test_occupancy_tracks_smax():
+    """Time-averaged state under CAB stays near S_max = (1, N2)."""
+    m = ClosedNetworkSimulator(_cfg(n_completions=5000)).run(CABDispatcher())
+    occ = m.state_occupancy
+    assert occ[0, 0] == pytest.approx(1.0, abs=0.35)   # one P1-task on P1
+    assert occ[1, 0] == pytest.approx(0.0, abs=0.25)   # no P2-tasks on P1
+
+
+def test_proportional_power_energy_identity():
+    m = ClosedNetworkSimulator(_cfg()).run(CABDispatcher())
+    assert m.mean_energy == pytest.approx(1.0, rel=0.05)   # eq. 23
+
+
+def test_piecewise_closed_type_mix():
+    """Dispatchers adapt when task types are re-drawn per arrival."""
+    cfg = _cfg(type_mix=np.array([0.5, 0.5]), n_completions=2500)
+    m = ClosedNetworkSimulator(cfg).run(CABDispatcher())
+    assert m.little_product == pytest.approx(20, rel=0.1)
+    assert m.throughput > 0

@@ -1,0 +1,141 @@
+"""Training substrate: convergence, checkpoint/resume, recovery, compression."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, smoke_config
+from repro.models.model import build_model
+from repro.train import checkpoint as ckpt
+from repro.train.data import DataConfig, DataPipeline, batch_for_step
+from repro.train.fault_tolerance import StragglerTracker, run_with_recovery
+from repro.train.optimizer import (OptimizerConfig, apply_updates,
+                                   dequantize_int8, init_opt_state,
+                                   quantize_int8)
+from repro.train.train_step import init_train_state, make_train_step
+
+SC = smoke_config(ARCHS["qwen2.5-3b"])
+
+
+def _setup(microbatches=1, **opt_kw):
+    m = build_model(SC)
+    opt = OptimizerConfig(warmup_steps=2, decay_steps=20, **opt_kw)
+    state = init_train_state(m, jax.random.PRNGKey(0), opt)
+    step = jax.jit(make_train_step(m, opt, microbatches=microbatches))
+    dc = DataConfig(vocab_size=SC.vocab_size, seq_len=32, global_batch=4)
+    return m, state, step, dc
+
+
+def test_loss_decreases():
+    _, state, step, dc = _setup()
+    losses = []
+    for i in range(8):
+        batch = {k: jnp.asarray(v) for k, v in batch_for_step(dc, i).items()}
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert np.mean(losses[-3:]) < np.mean(losses[:3])
+
+
+def test_microbatching_matches_full_batch():
+    """Gradient accumulation is numerically equivalent to the full batch."""
+    m = build_model(SC.with_(dtype="float32", param_dtype="float32"))
+    opt = OptimizerConfig(warmup_steps=1, decay_steps=10)
+    s1 = init_train_state(m, jax.random.PRNGKey(0), opt)
+    s2 = jax.tree.map(jnp.copy, s1)
+    dc = DataConfig(vocab_size=SC.vocab_size, seq_len=32, global_batch=4)
+    batch = {k: jnp.asarray(v) for k, v in batch_for_step(dc, 0).items()}
+    s1, m1 = jax.jit(make_train_step(m, opt, microbatches=1))(s1, batch)
+    s2, m2 = jax.jit(make_train_step(m, opt, microbatches=2))(s2, batch)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-5, rtol=5e-4)
+
+
+def test_checkpoint_roundtrip_and_gc():
+    _, state, step, dc = _setup()
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3, 4):
+            ckpt.save(d, s, state, keep=2)
+        steps = sorted(os.listdir(d))
+        assert steps == ["step_00000003", "step_00000004"]
+        restored, at = ckpt.restore(d, state)
+        assert at == 4
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_data_pipeline_deterministic_resume():
+    dc = DataConfig(vocab_size=1000, seq_len=16, global_batch=2)
+    a = batch_for_step(dc, 7)
+    b = batch_for_step(dc, 7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    pipe = DataPipeline(dc, start_step=7)
+    i, streamed = next(pipe)
+    pipe.close()
+    assert i == 7
+    np.testing.assert_array_equal(streamed["tokens"], a["tokens"])
+
+
+def test_run_with_recovery_heals_injected_failure():
+    _, state, step, dc = _setup()
+    calls = {"n": 0}
+
+    def flaky_step(s, batch):
+        calls["n"] += 1
+        if calls["n"] == 5:
+            raise RuntimeError("injected node failure")
+        return step(s, batch)
+
+    class Iter:
+        def __init__(self):
+            self.i = 0
+
+        def __iter__(self):
+            return self
+
+        def __next__(self):
+            b = {k: jnp.asarray(v) for k, v in batch_for_step(dc, self.i).items()}
+            i = self.i
+            self.i += 1
+            return i, b
+
+        def seek(self, step_):
+            self.i = step_
+
+    with tempfile.TemporaryDirectory() as d:
+        final, steps, restarts = run_with_recovery(
+            flaky_step, state, Iter(), ckpt_dir=d, ckpt_every=2,
+            max_steps=10, async_ckpt=False)
+    assert steps == 10
+    assert restarts == 1
+
+
+def test_int8_compression_error_feedback():
+    x = jnp.array([0.1, -0.5, 3.0, 1e-4])
+    q, s = quantize_int8(x)
+    deq = dequantize_int8(q, s)
+    assert float(jnp.abs(deq - x).max()) <= float(s) * 0.51
+    # optimizer runs with compression on and stays finite
+    m = build_model(SC)
+    opt = OptimizerConfig(warmup_steps=1, decay_steps=10, compress_grads=True)
+    state = init_train_state(m, jax.random.PRNGKey(0), opt)
+    dc = DataConfig(vocab_size=SC.vocab_size, seq_len=32, global_batch=4)
+    step = jax.jit(make_train_step(m, opt, microbatches=1))
+    batch = {k: jnp.asarray(v) for k, v in batch_for_step(dc, 0).items()}
+    state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert "err" in state.opt
+
+
+def test_straggler_tracker_relative_speed():
+    t = StragglerTracker(3, alpha=0.5)
+    for _ in range(6):
+        t.observe(0, 1.0)
+        t.observe(1, 0.4)    # pool 1 at 40% of nominal
+    f = t.slowdown_factors()
+    assert f[0] == pytest.approx(1.0, abs=0.05)
+    assert f[1] == pytest.approx(0.4, abs=0.1)
+    assert f[2] == 1.0       # unseen -> nominal
