@@ -15,11 +15,11 @@ import numpy as np
 from benchmarks.common import Timer, emit, save_json
 from repro.core import cab_solve, classify_2x2
 from repro.core.affinity import AffinityCase
-from repro.sched import BaselineClusterScheduler, ClusterScheduler
 from repro.sched.virtual import VirtualTimeCluster
 
 N = 20
 ETAS = [0.2, 0.35, 0.5, 0.65, 0.8]
+POLICIES = ("cab", "bf", "lb", "jsq", "rd")
 
 
 def _pools_general_symmetric():
@@ -81,15 +81,11 @@ def _run_case(name, fns, expect_cases, n_completions=400, warmup=80):
         types = [0] * n1 + [1] * (N - n1)
         theory = cab_solve(mu, n1, N - n1).x_max
         row = {"eta": eta, "theory": theory}
-        for pname, sched in [
-                ("CAB", ClusterScheduler(mu, policy="cab")),
-                ("BF", BaselineClusterScheduler(mu, "BF")),
-                ("LB", BaselineClusterScheduler(mu, "LB")),
-                ("JSQ", BaselineClusterScheduler(mu, "JSQ")),
-                ("RD", BaselineClusterScheduler(mu, "RD"))]:
+        for pname in POLICIES:
             m = VirtualTimeCluster(fns).run_closed(
-                sched, types, n_completions=n_completions, warmup=warmup)
-            row[pname] = m.throughput
+                pname, types, n_completions=n_completions, warmup=warmup,
+                mu=mu)
+            row[pname.upper()] = m.throughput
         rows.append(row)
     # CAB is compared against the non-equivalent classics (LB/JSQ/RD). In the
     # general-symmetric case CAB CHOOSES BF (identical dispatch decisions), so

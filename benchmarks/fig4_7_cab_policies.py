@@ -12,13 +12,14 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Timer, emit, save_json
-from repro.core import make_policies
+from repro.sched import get_policy
 from repro.sim import ClosedNetworkSimulator, SimConfig, make_distribution
 
 MU = np.array([[20.0, 15.0], [3.0, 8.0]])
 N = 20
 ETAS = [round(0.1 * i, 1) for i in range(1, 10)]
 DISTS = ["exponential", "bounded_pareto", "uniform", "constant"]
+POLICIES = ("cab", "rd", "bf", "lb", "jsq")
 
 
 def run(n_completions: int = 5000, warmup: int = 1000, seed: int = 7):
@@ -33,7 +34,7 @@ def run(n_completions: int = 5000, warmup: int = 1000, seed: int = 7):
                     order="PS", n_completions=n_completions,
                     warmup_completions=warmup, seed=seed)
                 sim = ClosedNetworkSimulator(cfg)
-                for d in make_policies("2type"):
+                for d in map(get_policy, POLICIES):
                     m = sim.run(d)
                     results[(dist, eta, d.name)] = {
                         "X": m.throughput, "ET": m.mean_response_time,

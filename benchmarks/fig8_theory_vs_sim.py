@@ -5,7 +5,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Timer, emit, save_json
-from repro.core import CABDispatcher, cab_solve
+from repro.core import cab_solve
 from repro.sim import ClosedNetworkSimulator, SimConfig, make_distribution
 
 MU = np.array([[20.0, 15.0], [3.0, 8.0]])
@@ -26,7 +26,7 @@ def run(n_completions: int = 6000, warmup: int = 1200, seed: int = 11):
                                 distribution=make_distribution(dist),
                                 order="PS", n_completions=n_completions,
                                 warmup_completions=warmup, seed=seed)
-                m = ClosedNetworkSimulator(cfg).run(CABDispatcher())
+                m = ClosedNetworkSimulator(cfg).run("cab")
                 rows.append({"dist": dist, "eta": eta, "theory": theory,
                              "sim": m.throughput,
                              "rel_err": abs(m.throughput - theory) / theory})

@@ -6,11 +6,12 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Timer, emit, save_json
-from repro.core import (FixedTargetDispatcher, GrInDispatcher, exhaustive_solve,
-                        grin_solve, make_policies, random_affinity_matrix)
+from repro.core import exhaustive_solve, grin_solve, random_affinity_matrix
+from repro.sched import get_policy
 from repro.sim import ClosedNetworkSimulator, SimConfig, make_distribution
 
 DISTS = ["exponential", "bounded_pareto", "uniform", "constant"]
+POLICIES = ("grin", "rd", "bf", "lb", "jsq")
 
 
 def run(n_samples: int = 10, n_static: int = 200, n_completions: int = 4000,
@@ -41,7 +42,9 @@ def run(n_samples: int = 10, n_static: int = 200, n_completions: int = 4000,
                                 warmup_completions=800, seed=seed + s)
                 sim = ClosedNetworkSimulator(cfg)
                 row = {"sample": s, "dist": dist}
-                for d in make_policies("ktype") + [FixedTargetDispatcher(opt_n)]:
+                pols = [get_policy(n) for n in POLICIES]
+                pols.append(get_policy("fixed", target=opt_n))  # precomputed Opt
+                for d in pols:
                     m = sim.run(d)
                     row[d.name] = m.throughput
                 sim_rows.append(row)

@@ -8,8 +8,8 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (cab_solve, classify_2x2, exhaustive_solve, grin_solve,
-                        make_policies)
+from repro.core import cab_solve, classify_2x2, exhaustive_solve, grin_solve
+from repro.sched import available_policies, get_policy
 from repro.sim import ClosedNetworkSimulator, SimConfig, make_distribution
 
 # ---- the paper's P1-biased example (Sec. 5) -------------------------------
@@ -24,13 +24,14 @@ print(f"CAB policy={sol.policy}  S_max=(N11={sol.s_max[0]}, N22={sol.s_max[1]})"
 print("  -> 'Accelerate the Fastest': ONE task alone on P1, everything else"
       " shares P2 (the counter-intuitive optimum)\n")
 
-# ---- simulate all policies ------------------------------------------------
+# ---- simulate all policies (constructed via the registry) -----------------
+print("registry:", ", ".join(available_policies()))
 cfg = SimConfig(mu=mu, n_programs_per_type=np.array([n1, n2]),
                 distribution=make_distribution("exponential"),
                 order="PS", n_completions=6000, warmup_completions=1000)
 sim = ClosedNetworkSimulator(cfg)
 print(f"{'policy':6s} {'X':>8s} {'E[T]':>8s} {'EDP':>8s}")
-for d in make_policies("2type"):
+for d in map(get_policy, ("cab", "rd", "bf", "lb", "jsq")):
     m = sim.run(d)
     print(f"{d.name:6s} {m.throughput:8.2f} {m.mean_response_time:8.3f} "
           f"{m.edp:8.3f}")

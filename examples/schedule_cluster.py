@@ -8,7 +8,8 @@ import numpy as np
 
 from repro.core import grin_solve, exhaustive_solve
 from repro.sched import (ChipSpec, ClusterScheduler, StepCost,
-                         affinity_from_roofline, serving_step_costs)
+                         affinity_from_roofline, get_policy,
+                         serving_step_costs, solve_targets_jax)
 
 # ---- a heterogeneous fleet: three pool types ------------------------------
 V5E = ChipSpec("tpu-v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9)
@@ -35,8 +36,15 @@ print(f"\nGrIn placement (rows=classes, cols=pools):\n{g.N}")
 print(f"GrIn X={g.x_sys:.2f}  exhaustive X={xopt:.2f} "
       f"(gap {100*(xopt-g.x_sys)/xopt:.2f}%)")
 
+# ---- batched target pre-solve for the expected mixes (on-device) ----------
+mixes = np.array([[12, 30, 6], [8, 34, 6], [16, 26, 6], [12, 24, 12]])
+targets, xs = solve_targets_jax(mu, mixes)
+print("\nbatched GrIn targets for 4 anticipated type mixes (X per mix):",
+      np.round(xs, 1))
+
 # ---- straggler mitigation: pool 1 degrades to 40% -------------------------
-sched = ClusterScheduler(mu, policy="grin", resolve_rate_rel_change=0.2)
+sched = ClusterScheduler(mu, policy=get_policy("grin"),
+                         resolve_rate_rel_change=0.2)
 for i, nt in enumerate(n_tasks):
     for _ in range(nt):
         sched.route(i)
@@ -46,10 +54,10 @@ print("\nlive counts before degradation:\n", before)
 for _ in range(8):
     t = int(np.argmax(sched.counts.sum(axis=1)))
     expected = 1.0 / sched.mu[1, 1]
-    sched.complete(1, 1, service_s=2.5 * (1.0 / sched._base_mu[1, 1]))
+    sched.complete(1, 1, service_s=2.5 * (1.0 / sched.base_mu[1, 1]))
     sched.route(1)
 print("mu column 1 scaled by:",
-      np.round(sched.mu[:, 1] / sched._base_mu[:, 1], 2))
+      np.round(sched.mu[:, 1] / sched.base_mu[:, 1], 2))
 print("re-solves so far:", sched.resolves)
 
 # ---- elastic: pool 2 dies --------------------------------------------------

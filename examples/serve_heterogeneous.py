@@ -15,7 +15,6 @@ import numpy as np
 from repro.configs import get_arch, smoke_config
 from repro.core import classify_2x2, cab_solve
 from repro.models.model import build_model
-from repro.sched import BaselineClusterScheduler, ClusterScheduler
 from repro.sched.virtual import VirtualTimeCluster
 from repro.serve.engine import ServeEngine
 
@@ -72,14 +71,9 @@ def main():
         types = [0] * n1 + [1] * (N - n1)
         sol = cab_solve(mu, n1, N - n1)
         row = {}
-        for name, sched in [
-                ("CAB", ClusterScheduler(mu, policy="cab")),
-                ("BF", BaselineClusterScheduler(mu, "BF")),
-                ("LB", BaselineClusterScheduler(mu, "LB")),
-                ("JSQ", BaselineClusterScheduler(mu, "JSQ")),
-                ("RD", BaselineClusterScheduler(mu, "RD"))]:
+        for name in ("CAB", "BF", "LB", "JSQ", "RD"):
             m = VirtualTimeCluster(fns).run_closed(
-                sched, types, n_completions=150, warmup=30)
+                name, types, n_completions=150, warmup=30, mu=mu)
             row[name] = m.throughput
         best = max(row, key=row.get)
         print(f"eta={eta:.2f} theory_X={sol.x_max:7.2f} | " +

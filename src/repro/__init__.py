@@ -1,0 +1,2 @@
+"""Reproduction of Chen & Marculescu, arXiv:1712.03209, grown into a
+JAX serving/training stack (see ROADMAP.md)."""

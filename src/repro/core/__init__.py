@@ -11,12 +11,8 @@ from repro.core.exhaustive import exhaustive_count, exhaustive_solve
 from repro.core.grin import GrInResult, grin_init, grin_solve, grin_solve_jax
 from repro.core.grin_plus import (grin_multistart_solve, grin_plus_solve,
                                   grin_solve_from)
-from repro.core.policies import (ALL_BASELINES, BestFitDispatcher, CABDispatcher,
-                                 Dispatcher, FixedTargetDispatcher,
-                                 GrInDispatcher, JoinShortestQueueDispatcher,
-                                 LoadBalancingDispatcher, RandomDispatcher,
-                                 SystemView, make_policies)
-from repro.core.slsqp import SLSQPResult, slsqp_solve
+from repro.core.slsqp import (SLSQPResult, round_largest_remainder,
+                              slsqp_solve)
 from repro.core.throughput import (column_throughputs, delta_x_add,
                                    delta_x_remove, state_from_pair,
                                    system_throughput, system_throughput_jax,

@@ -57,25 +57,32 @@ def slsqp_solve(mu: np.ndarray, n_tasks, x0: np.ndarray | None = None,
                        runtime_s=dt, message=str(res.message))
 
 
-def slsqp_integer_rounded_x(result: SLSQPResult, mu: np.ndarray, n_tasks) -> float:
-    """Naive row-wise largest-remainder rounding of the continuous solution.
+def round_largest_remainder(N_cont: np.ndarray, n_tasks) -> np.ndarray:
+    """Row-wise largest-remainder rounding of a continuous placement to a
+    feasible integer one (row sums restored exactly).
 
-    The paper deliberately does NOT round ("not a trivial task"); we provide a
-    simple rounding for additional comparison only.
+    The paper deliberately does NOT round ("not a trivial task"); this naive
+    rounding backs the SLSQP dispatch policy and extra comparisons only.
     """
-    mu = np.asarray(mu, dtype=np.float64)
+    N_cont = np.asarray(N_cont, dtype=np.float64)
     n_tasks = np.asarray(n_tasks, dtype=np.int64)
-    k, l = result.N.shape
-    N = np.floor(result.N).astype(np.int64)
+    k, _ = N_cont.shape
+    N = np.floor(N_cont).astype(np.int64)
     for i in range(k):
         deficit = int(n_tasks[i] - N[i].sum())
+        frac = N_cont[i] - np.floor(N_cont[i])
         if deficit > 0:
-            frac = result.N[i] - np.floor(result.N[i])
             order = np.argsort(-frac)
             for j in order[:deficit]:
                 N[i, j] += 1
         elif deficit < 0:  # numerical overshoot
-            order = np.argsort(result.N[i] - np.floor(result.N[i]))
+            order = np.argsort(frac)
             for j in order[:-deficit]:
                 N[i, j] -= 1
-    return system_throughput(np.maximum(N, 0), mu)
+    return np.maximum(N, 0)
+
+
+def slsqp_integer_rounded_x(result: SLSQPResult, mu: np.ndarray, n_tasks) -> float:
+    """Throughput of the largest-remainder-rounded continuous solution."""
+    return system_throughput(
+        round_largest_remainder(result.N, n_tasks), np.asarray(mu, np.float64))

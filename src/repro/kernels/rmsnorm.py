@@ -13,6 +13,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax >= 0.5 renamed TPUCompilerParams to CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 
 def _kernel(x_ref, w_ref, o_ref, *, eps: float):
     x = x_ref[...].astype(jnp.float32)
@@ -35,7 +39,7 @@ def rmsnorm_pallas(x, w, *, eps=1e-5, block_rows=256, interpret=False):
         ],
         out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(x, w)

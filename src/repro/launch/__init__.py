@@ -1,0 +1,1 @@
+"""Entry points: train / serve / dryrun launchers."""

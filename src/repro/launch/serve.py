@@ -57,7 +57,7 @@ def main() -> None:
 
     if args.heterogeneous:
         from repro.core import classify_2x2
-        from repro.sched import BaselineClusterScheduler, ClusterScheduler
+        from repro.sched import SchedulerCore, get_policy
         from repro.sched.virtual import VirtualTimeCluster
 
         def prefill_task(size):
@@ -83,11 +83,11 @@ def main() -> None:
         print(f"[serve] measured mu:\n{np.round(mu, 2)} "
               f"({classify_2x2(mu).value})")
         types = [0] * 4 + [1] * 4
-        for name, sched in [("CAB", ClusterScheduler(mu, policy="cab")),
-                            ("LB", BaselineClusterScheduler(mu, "LB"))]:
+        for name in ("cab", "lb"):
+            sched = SchedulerCore(get_policy(name), mu)
             m = VirtualTimeCluster(fns).run_closed(
                 sched, types, n_completions=60, warmup=10)
-            print(f"[serve] {name}: X={m.throughput:.2f} req/s")
+            print(f"[serve] {sched.name}: X={m.throughput:.2f} req/s")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,1 @@
+"""Model zoo: transformer/SSM/hybrid families used as real workloads."""

@@ -1,0 +1,1 @@
+"""Sharding and mesh utilities."""

@@ -1,4 +1,8 @@
-"""Paper <-> framework bridge: heterogeneous pools + CAB/GrIn dispatch."""
+"""Paper <-> framework bridge: heterogeneous pools + the unified
+Policy/SchedulerCore scheduling API."""
+from repro.sched.api import (Policy, SchedulerCore, SystemView, as_core,
+                             available_policies, get_policy, register_policy,
+                             solve_targets_jax)
 from repro.sched.baselines import BaselineClusterScheduler
 from repro.sched.cluster import (ChipSpec, HeterogeneousCluster, Pool,
                                  PoolSpec, TaskRecord)

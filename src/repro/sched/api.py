@@ -1,0 +1,491 @@
+"""Unified scheduling API: one `Policy` protocol + one `SchedulerCore`.
+
+The paper's central claim (Lemma 2) is that a single routing rule — keep the
+live placement pinned at the solver's target state N* via largest-deficit
+dispatch — is optimal regardless of the execution substrate. This module is
+that claim expressed as code: every solver (CAB, GrIn, GrIn+, SLSQP,
+exhaustive Opt) and every classic baseline (RD/BF/LB/JSQ) is a `Policy`, and
+the shared machinery — target caching keyed on (type-mix, mu), largest-deficit
+routing with rate tiebreak, EWMA straggler rate-folding, elastic topology
+events — lives exactly once in `SchedulerCore`.
+
+All four drivers route through it:
+
+  * `repro.sim.ClosedNetworkSimulator`   — discrete-event closed network
+  * `repro.sched.virtual.VirtualTimeCluster` — virtual-time real executions
+  * `repro.sched.ClusterScheduler`       — thread-safe wrapper for real pools
+  * `repro.launch.serve` / `repro.serve` — heterogeneous serving path
+
+Policies are constructed through a string registry:
+
+    >>> core = SchedulerCore(get_policy("grin"), mu)
+    >>> j = core.route(task_type)            # largest-deficit dispatch
+    >>> core.complete(task_type, j, service_s=dt)   # EWMA rate feedback
+    >>> available_policies()
+    ('bf', 'cab', 'fixed', 'grin', 'grin+', 'jsq', 'lb', 'opt', 'rd', 'slsqp')
+
+`solve_targets_jax` batches target re-solves over many type-mixes on device
+(vmap of `grin_solve_jax`) for policy sweeps and piecewise-closed operation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cab import cab_target_state
+from repro.core.exhaustive import exhaustive_solve
+from repro.core.grin import grin_solve, grin_solve_jax
+from repro.core.grin_plus import grin_multistart_solve
+from repro.core.slsqp import round_largest_remainder, slsqp_solve
+from repro.core.throughput import system_throughput_jax
+from repro.train.fault_tolerance import StragglerTracker
+
+
+@dataclasses.dataclass
+class SystemView:
+    """What a policy may observe when routing one task."""
+
+    counts: np.ndarray         # (k, l) tasks currently resident per (type, proc)
+    backlog_work: np.ndarray   # (l,) total remaining service demand per proc
+    backlog_tasks: np.ndarray  # (l,) number of tasks queued/running per proc
+    mu: np.ndarray             # (k, l) affinity matrix
+
+
+# ---------------------------------------------------------------------------
+# Policy protocol + registry
+# ---------------------------------------------------------------------------
+
+class Policy:
+    """One scheduling policy: either a target solver or a stateless chooser.
+
+    Capability flags:
+      needs_target       — True: `solve_target` yields N* and SchedulerCore
+                           routes by largest deficit; False: `choose` picks a
+                           processor directly from a SystemView.
+      pool_limit         — exact number of pools required (CAB: 2), or None.
+      integer_target     — target entries are integers (SLSQP relaxes then
+                           rounds; the flag records the relaxation).
+      supports_jax_batch — `solve_targets_jax` can batch this policy's
+                           re-solves on device.
+    """
+
+    name = "base"
+    key = "base"
+    needs_target = True
+    pool_limit: int | None = None
+    integer_target = True
+    supports_jax_batch = False
+
+    def solve_target(self, mu: np.ndarray, n_tasks: np.ndarray) -> np.ndarray:
+        """Return the (k, l) target placement N* for the given type mix."""
+        raise NotImplementedError(f"{self.name} is not a target policy")
+
+    def choose(self, task_type: int, view: SystemView,
+               rng: np.random.Generator) -> int:
+        """Stateless policies: pick the processor for one arriving task."""
+        raise NotImplementedError(f"{self.name} is not a stateless policy")
+
+
+_REGISTRY: dict[str, type[Policy]] = {}
+
+
+def register_policy(key: str, *aliases: str):
+    """Class decorator: register a Policy under `key` (+ aliases)."""
+    def deco(cls):
+        cls.key = key
+        for k in (key, *aliases):
+            _REGISTRY[k] = cls
+        return cls
+    return deco
+
+
+def get_policy(name: str | Policy, **kwargs) -> Policy:
+    """Construct a policy by registry name (case-insensitive).
+
+    A Policy instance passes through unchanged, so call sites can accept
+    either form.
+    """
+    if isinstance(name, Policy):
+        if kwargs:
+            raise TypeError("constructor kwargs only apply to registry names; "
+                            f"got a {name.name} instance plus {set(kwargs)}")
+        return name
+    cls = _REGISTRY.get(str(name).lower())
+    if cls is None:
+        raise KeyError(f"unknown policy {name!r}; available: "
+                       f"{', '.join(available_policies())}")
+    return cls(**kwargs)
+
+
+def available_policies() -> tuple[str, ...]:
+    """Canonical registry keys (aliases excluded), sorted."""
+    return tuple(sorted({cls.key for cls in _REGISTRY.values()}))
+
+
+# ------------------------------- target policies ---------------------------
+
+@register_policy("cab")
+class CABPolicy(Policy):
+    """CAB Table-1 analytical optimum (two processor types only)."""
+
+    name = "CAB"
+    pool_limit = 2
+
+    def solve_target(self, mu, n_tasks):
+        if mu.shape[1] != 2:
+            raise ValueError("CAB is the two-pool analytical solution; got "
+                             f"{mu.shape[1]} pools (use 'grin')")
+        return cab_target_state(mu, n_tasks)
+
+
+@register_policy("grin")
+class GrInPolicy(Policy):
+    """GrIn greedy-increase near-optimal placement (any k x l)."""
+
+    name = "GrIn"
+    supports_jax_batch = True
+
+    def solve_target(self, mu, n_tasks):
+        return grin_solve(mu, n_tasks).N
+
+
+@register_policy("grin+", "grin_plus", "grinplus")
+class GrInPlusPolicy(Policy):
+    """GrIn+ multistart (swap escapes + basin hops + AF seeds)."""
+
+    name = "GrIn+"
+
+    def solve_target(self, mu, n_tasks):
+        return grin_multistart_solve(mu, n_tasks).N
+
+
+@register_policy("slsqp")
+class SLSQPPolicy(Policy):
+    """Continuous SLSQP relaxation, largest-remainder rounded to integers."""
+
+    name = "SLSQP"
+    integer_target = False
+
+    def solve_target(self, mu, n_tasks):
+        res = slsqp_solve(mu, n_tasks)
+        return round_largest_remainder(res.N, n_tasks)
+
+
+@register_policy("opt", "exhaustive")
+class ExhaustivePolicy(Policy):
+    """Exhaustive enumeration — exact optimum, exponential cost (paper scale
+    only: 3x3, N ~ 20)."""
+
+    name = "Opt"
+
+    def solve_target(self, mu, n_tasks):
+        N, _ = exhaustive_solve(mu, n_tasks)
+        return N
+
+
+@register_policy("fixed")
+class FixedTargetPolicy(Policy):
+    """Pin an externally computed placement (e.g. a precomputed exhaustive
+    optimum reused across runs)."""
+
+    name = "Opt"
+
+    def __init__(self, target: np.ndarray, name: str = "Opt"):
+        self._fixed = np.asarray(target, dtype=np.int64)
+        self.name = name
+
+    def solve_target(self, mu, n_tasks):
+        return self._fixed
+
+
+# ------------------------------ stateless baselines ------------------------
+
+@register_policy("rd", "random")
+class RandomPolicy(Policy):
+    """RD: uniform random processor."""
+
+    name = "RD"
+    needs_target = False
+
+    def choose(self, task_type, view, rng):
+        return int(rng.integers(view.mu.shape[1]))
+
+
+@register_policy("bf", "bestfit")
+class BestFitPolicy(Policy):
+    """BF: processor with the highest rate for this task type."""
+
+    name = "BF"
+    needs_target = False
+
+    def choose(self, task_type, view, rng):
+        return int(np.argmax(view.mu[task_type]))
+
+
+@register_policy("lb", "loadbalance")
+class LoadBalancingPolicy(Policy):
+    """LB: least remaining work. The simulator supplies true sizes (an upper
+    bound on an estimating LB); the live cluster supplies expected seconds."""
+
+    name = "LB"
+    needs_target = False
+
+    def choose(self, task_type, view, rng):
+        return int(np.argmin(view.backlog_work))
+
+
+@register_policy("jsq")
+class JoinShortestQueuePolicy(Policy):
+    """JSQ: least number of resident tasks."""
+
+    name = "JSQ"
+    needs_target = False
+
+    def choose(self, task_type, view, rng):
+        return int(np.argmin(view.backlog_tasks))
+
+
+# ---------------------------------------------------------------------------
+# Batched on-device target solving
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _solve_targets_jax(mu: jnp.ndarray, mixes: jnp.ndarray):
+    targets = jax.vmap(lambda nt: grin_solve_jax(mu, nt))(mixes)
+    xs = jax.vmap(lambda N: system_throughput_jax(N, mu))(targets)
+    return targets, xs
+
+
+def solve_targets_jax(mu, n_tasks_batch):
+    """Batched GrIn re-solve over many type mixes, vectorized on device.
+
+    Returns (targets (B, k, l) int64, x_sys (B,) float). Used for policy
+    sweeps and piecewise-closed target pre-warming where looping the NumPy
+    solver in Python would dominate. The JAX solver is the steepest-ascent
+    GrIn variant: it reaches a local maximum of the same objective but may
+    land in a different (rarely, slightly worse) basin than the sweep solver.
+    """
+    mu = jnp.asarray(mu, dtype=jnp.float32)
+    mixes = jnp.asarray(n_tasks_batch, dtype=jnp.float32)
+    if mixes.ndim != 2 or mixes.shape[1] != mu.shape[0]:
+        raise ValueError(f"n_tasks_batch must be (B, k={mu.shape[0]}); got "
+                         f"{tuple(mixes.shape)}")
+    targets, xs = _solve_targets_jax(mu, mixes)
+    return (np.asarray(targets).round().astype(np.int64), np.asarray(xs))
+
+
+# ---------------------------------------------------------------------------
+# SchedulerCore — the shared machinery, implemented exactly once
+# ---------------------------------------------------------------------------
+
+_CACHE_CAP = 1024
+
+
+class SchedulerCore:
+    """Largest-deficit routing toward a policy's target state N* (Lemma 2),
+    with target caching, EWMA straggler rate-folding and elastic topology.
+
+    Single-threaded; `repro.sched.ClusterScheduler` adds the lock for
+    threaded pools. Drivers interact through:
+
+      route(task_type[, view][, rng]) -> pool   (updates live counts)
+      complete(task_type, pool[, service_s])    (EWMA feedback if timed)
+      notify_type_counts(n_tasks)               (piecewise-closed mix change)
+      pool_lost(j) / pool_added(mu_column)      (elastic topology)
+      warm_targets(mixes)                       (batched pre-solve, JAX path)
+
+    When the in-flight type mix is pinned via reset/notify_type_counts, the
+    target is solved for that mix (the simulator's closed-population case);
+    otherwise the mix is inferred from live counts plus the arriving task
+    (the live cluster case). Both reduce to the same deficit rule.
+    """
+
+    def __init__(self, policy: str | Policy, mu: np.ndarray, *,
+                 rate_alpha: float = 0.3,
+                 resolve_rate_rel_change: float = 0.25, seed: int = 0):
+        self.policy = get_policy(policy)
+        self._rate_alpha = rate_alpha
+        self._resolve_threshold = resolve_rate_rel_change
+        self._seed = seed
+        self.reset(mu)
+
+    # ---------------- lifecycle ----------------
+    def reset(self, mu: np.ndarray | None = None,
+              n_tasks: np.ndarray | None = None) -> "SchedulerCore":
+        """Zero live state (counts, backlog, EWMA, cache); optionally install
+        a new affinity matrix and pin the initial type mix."""
+        if mu is not None:
+            self.mu = np.asarray(mu, dtype=np.float64)
+            if self.policy.pool_limit not in (None, self.mu.shape[1]):
+                raise ValueError(
+                    f"{self.policy.name} requires exactly "
+                    f"{self.policy.pool_limit} pools; got {self.mu.shape[1]}")
+        elif hasattr(self, "base_mu"):
+            self.mu = self.base_mu.copy()   # drop EWMA folding: back to nominal
+        self.k, self.l = self.mu.shape
+        self.base_mu = self.mu.copy()
+        self.counts = np.zeros((self.k, self.l), dtype=np.int64)
+        self.backlog_work = np.zeros(self.l)
+        self.tracker = StragglerTracker(self.l, alpha=self._rate_alpha)
+        self._rng = np.random.default_rng(self._seed)
+        self._targets: dict[tuple, np.ndarray] = {}
+        self._mix: np.ndarray | None = None
+        self.resolves = 0
+        if n_tasks is not None:
+            self.notify_type_counts(n_tasks)
+        return self
+
+    @property
+    def name(self) -> str:
+        return self.policy.name
+
+    # ---------------- target maintenance ----------------
+    def _target_for(self, n_tasks: np.ndarray) -> np.ndarray:
+        key = (tuple(int(x) for x in n_tasks), self.mu.tobytes())
+        hit = self._targets.get(key)
+        if hit is None:
+            if len(self._targets) >= _CACHE_CAP:
+                self._targets.clear()
+            hit = np.asarray(self.policy.solve_target(self.mu, np.asarray(n_tasks)))
+            if hit.shape != (self.k, self.l):
+                raise ValueError(
+                    f"{self.policy.name} target shape {hit.shape} does not "
+                    f"match the current ({self.k}, {self.l}) topology (fixed "
+                    "targets must be re-pinned after pool_lost/pool_added)")
+            self._targets[key] = hit
+            self.resolves += 1
+        return hit
+
+    def notify_type_counts(self, n_tasks: np.ndarray) -> None:
+        """Piecewise-closed operation: the in-flight type mix changed (or is
+        externally known, e.g. a closed population). Pins the mix used for
+        target solving until the next notify/reset."""
+        self._mix = np.asarray(n_tasks, dtype=np.int64)
+
+    def warm_targets(self, mixes) -> int:
+        """Pre-solve targets for many type mixes. Policies that support it
+        batch on device via `solve_targets_jax`; others loop the host solver.
+        Returns the number of targets inserted during this call. The cache
+        holds at most _CACHE_CAP entries (it is cleared and refilled past
+        that), so warming more than the cap keeps only the tail of `mixes`
+        cached; earlier mixes re-solve lazily on the host.
+
+        The batched path uses the steepest-ascent JAX solver, so a warmed
+        mix can pin a different (same-quality-class) local maximum than the
+        host solver would — routing on warmed entries is a deliberate
+        speed-for-bit-parity trade; skip warming where exact reproducibility
+        vs a cold core matters."""
+        mixes = np.asarray(mixes, dtype=np.int64)
+        if self.policy.supports_jax_batch and self.policy.needs_target:
+            targets, _ = solve_targets_jax(self.mu, mixes)
+            mu_key = self.mu.tobytes()
+            added = 0
+            for mix, N in zip(mixes, targets):
+                key = (tuple(int(x) for x in mix), mu_key)
+                if key in self._targets:
+                    continue
+                if len(self._targets) >= _CACHE_CAP:
+                    self._targets.clear()
+                self._targets[key] = N
+                added += 1
+            return added
+        before = self.resolves
+        for mix in mixes:
+            self._target_for(mix)
+        return self.resolves - before
+
+    # ---------------- routing ----------------
+    def _internal_view(self) -> SystemView:
+        return SystemView(counts=self.counts, backlog_work=self.backlog_work,
+                          backlog_tasks=self.counts.sum(axis=0), mu=self.mu)
+
+    def route(self, task_type: int, view: SystemView | None = None,
+              rng: np.random.Generator | None = None) -> int:
+        """Choose the pool for an arriving task; updates live counts.
+
+        `view` lets a driver expose richer observations (the simulator's true
+        remaining work for LB); target policies route on counts either way.
+        `rng` lets a driver own the random stream (reproducible sweeps).
+        """
+        if self.policy.needs_target:
+            if self._mix is not None:
+                mix = self._mix
+            else:
+                mix = self.counts.sum(axis=1)
+                mix[task_type] += 1            # include the arriving task
+            target = self._target_for(mix)
+            counts = view.counts if view is not None else self.counts
+            deficit = target[task_type] - counts[task_type]
+            best = np.flatnonzero(deficit == deficit.max())
+            j = int(best[np.argmax(self.mu[task_type][best])])
+        else:
+            j = int(self.policy.choose(
+                task_type, view if view is not None else self._internal_view(),
+                rng if rng is not None else self._rng))
+        self.counts[task_type, j] += 1
+        self.backlog_work[j] += 1.0 / self.mu[task_type, j]
+        return j
+
+    def complete(self, task_type: int, pool: int,
+                 service_s: float | None = None) -> None:
+        """A task finished on `pool`; with a measured service time, fold the
+        observation into the EWMA and re-solve on material rate change."""
+        self.counts[task_type, pool] -= 1
+        self.backlog_work[pool] = max(
+            0.0, self.backlog_work[pool] - 1.0 / self.mu[task_type, pool])
+        if service_s is not None:
+            expected = 1.0 / self.base_mu[task_type, pool]
+            self.tracker.observe(pool, expected / max(service_s, 1e-12))
+            # Rate-folding serves the target refresh; the classic stateless
+            # baselines stay static, as the paper defines them.
+            if self.policy.needs_target:
+                self._maybe_refresh_rates()
+
+    # ---------------- stragglers / elastic ----------------
+    def _maybe_refresh_rates(self) -> None:
+        """Fold observed slowdowns into mu; targets re-solve lazily because
+        the cache key includes mu."""
+        factors = self.tracker.slowdown_factors()
+        new_mu = self.base_mu * factors[None, :]
+        rel = np.abs(new_mu - self.mu) / np.maximum(self.mu, 1e-12)
+        if rel.max() > self._resolve_threshold:
+            self.mu = new_mu
+
+    def pool_lost(self, pool: int) -> None:
+        """Elastic: a pool died; drop its column and re-solve on next route.
+        In-flight tasks on the pool are the caller's to re-enqueue."""
+        self.mu = np.delete(self.mu, pool, axis=1)
+        self.base_mu = np.delete(self.base_mu, pool, axis=1)
+        self.counts = np.delete(self.counts, pool, axis=1)
+        self.backlog_work = np.delete(self.backlog_work, pool)
+        self.l -= 1
+        self._targets.clear()
+        t = self.tracker
+        t.rates = np.delete(t.rates, pool)
+        t.seen = np.delete(t.seen, pool)
+
+    def pool_added(self, mu_column: np.ndarray) -> None:
+        mu_column = np.asarray(mu_column, dtype=np.float64)
+        self.mu = np.concatenate([self.mu, mu_column[:, None]], axis=1)
+        self.base_mu = np.concatenate([self.base_mu, mu_column[:, None]],
+                                      axis=1)
+        self.counts = np.concatenate(
+            [self.counts, np.zeros((self.k, 1), np.int64)], axis=1)
+        self.backlog_work = np.append(self.backlog_work, 0.0)
+        self.l += 1
+        self._targets.clear()
+        t = self.tracker
+        t.rates = np.append(t.rates, 0.0)
+        t.seen = np.append(t.seen, False)
+
+
+def as_core(policy: str | Policy | SchedulerCore, mu: np.ndarray,
+            **kwargs) -> SchedulerCore:
+    """Coerce any accepted policy spec into a SchedulerCore over `mu`."""
+    if isinstance(policy, SchedulerCore):
+        return policy
+    return SchedulerCore(policy, mu, **kwargs)

@@ -1,42 +1,19 @@
-"""Classic cluster schedulers (RD/BF/LB/JSQ) with the ClusterScheduler
-interface, for real-platform policy comparisons (paper Sec. 7)."""
-from __future__ import annotations
+"""Classic cluster schedulers (RD/BF/LB/JSQ) — kept as a compatibility name.
 
-import threading
+The policies themselves live in the unified registry (`repro.sched.api`);
+this wrapper just maps the historical `BaselineClusterScheduler(mu, "LB")`
+constructor onto the shared SchedulerCore via ClusterScheduler.
+"""
+from __future__ import annotations
 
 import numpy as np
 
+from repro.sched.scheduler import ClusterScheduler
 
-class BaselineClusterScheduler:
+
+class BaselineClusterScheduler(ClusterScheduler):
     """route/complete interface over a stateless classic policy."""
 
     def __init__(self, mu: np.ndarray, kind: str, seed: int = 0):
-        self.mu = np.asarray(mu, dtype=np.float64)
-        self.k, self.l = self.mu.shape
+        super().__init__(mu, policy=kind, seed=seed)
         self.kind = kind
-        self.counts = np.zeros((self.k, self.l), dtype=np.int64)
-        self.backlog_work = np.zeros(self.l)   # expected seconds enqueued
-        self._rng = np.random.default_rng(seed)
-        self._lock = threading.Lock()
-
-    def route(self, task_type: int) -> int:
-        with self._lock:
-            if self.kind == "RD":
-                j = int(self._rng.integers(self.l))
-            elif self.kind == "BF":
-                j = int(np.argmax(self.mu[task_type]))
-            elif self.kind == "JSQ":
-                j = int(np.argmin(self.counts.sum(axis=0)))
-            elif self.kind == "LB":
-                j = int(np.argmin(self.backlog_work))
-            else:
-                raise ValueError(self.kind)
-            self.counts[task_type, j] += 1
-            self.backlog_work[j] += 1.0 / self.mu[task_type, j]
-            return j
-
-    def complete(self, task_type: int, pool: int, service_s=None):
-        with self._lock:
-            self.counts[task_type, pool] -= 1
-            self.backlog_work[pool] = max(
-                0.0, self.backlog_work[pool] - 1.0 / self.mu[task_type, pool])

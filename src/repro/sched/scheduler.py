@@ -1,10 +1,10 @@
-"""ClusterScheduler: the paper's policy driving a real pool cluster.
+"""ClusterScheduler: thread-safe wrapper around the unified SchedulerCore.
 
-Keeps the live placement at the CAB/GrIn optimum (Lemma 2: stay in S_max):
-an arriving task of type p goes to the pool with the largest deficit
-N*[p, j] - N[p, j]. Piecewise-closed operation: when the in-flight class mix,
-the pool set (elastic), or the EWMA rates (stragglers) change, the target N*
-is re-solved — GrIn is O(k*l) per move, so re-solves are microseconds.
+The deficit-routing + target-caching machinery lives in `repro.sched.api`
+(one implementation shared with the simulator, the virtual-time harness and
+the serving path); this class only adds the lock that real threaded pools
+need, and keeps the historical constructor `ClusterScheduler(mu, policy=...)`
+working — `policy` is any registry name (`get_policy`) or Policy instance.
 """
 from __future__ import annotations
 
@@ -13,97 +13,76 @@ import time
 
 import numpy as np
 
-from repro.core.cab import cab_target_state
-from repro.core.grin import grin_solve
-from repro.train.fault_tolerance import StragglerTracker
+from repro.sched.api import Policy, SchedulerCore
 
 
 class ClusterScheduler:
-    def __init__(self, mu: np.ndarray, policy: str = "grin",
-                 rate_alpha: float = 0.3, resolve_rate_rel_change: float = 0.25):
-        self.mu = np.asarray(mu, dtype=np.float64)
-        self.k, self.l = self.mu.shape
-        self.policy = policy
-        self.counts = np.zeros((self.k, self.l), dtype=np.int64)
-        self._target: np.ndarray | None = None
-        self._target_key = None
+    def __init__(self, mu: np.ndarray, policy: str | Policy = "grin",
+                 rate_alpha: float = 0.3,
+                 resolve_rate_rel_change: float = 0.25, seed: int = 0):
+        self.core = SchedulerCore(
+            policy, mu, rate_alpha=rate_alpha,
+            resolve_rate_rel_change=resolve_rate_rel_change, seed=seed)
         self._lock = threading.Lock()
-        self.tracker = StragglerTracker(self.l, alpha=rate_alpha)
-        self._resolve_threshold = resolve_rate_rel_change
-        self._base_mu = self.mu.copy()
-        self.resolves = 0
 
-    # ---------------- target maintenance ----------------
-    def _solve(self, n_tasks: np.ndarray) -> np.ndarray:
-        self.resolves += 1
-        if self.policy == "cab":
-            assert self.l == 2, "CAB is the two-pool analytical solution"
-            return cab_target_state(self.mu, n_tasks)
-        return grin_solve(self.mu, n_tasks).N
-
-    def _target_for(self, n_tasks: np.ndarray) -> np.ndarray:
-        key = (tuple(int(x) for x in n_tasks), self.mu.tobytes())
-        if key != self._target_key:
-            self._target = self._solve(n_tasks)
-            self._target_key = key
-        return self._target
-
-    # ---------------- routing ----------------
+    # ---------------- locked delegation ----------------
     def route(self, task_type: int) -> int:
-        """Choose the pool for an arriving task; updates live counts."""
         with self._lock:
-            n_tasks = self.counts.sum(axis=1)
-            n_tasks[task_type] += 1           # include the arriving task
-            target = self._target_for(n_tasks)
-            deficit = target[task_type] - self.counts[task_type]
-            best = np.flatnonzero(deficit == deficit.max())
-            j = int(best[np.argmax(self.mu[task_type][best])])
-            self.counts[task_type, j] += 1
-            return j
+            return self.core.route(task_type)
 
-    def complete(self, task_type: int, pool: int, service_s: float | None = None):
+    def complete(self, task_type: int, pool: int,
+                 service_s: float | None = None) -> None:
         with self._lock:
-            self.counts[task_type, pool] -= 1
-            if service_s is not None:
-                expected = 1.0 / self._base_mu[task_type, pool]
-                self.tracker.observe(pool, expected / max(service_s, 1e-12))
-                self._maybe_refresh_rates()
+            self.core.complete(task_type, pool, service_s)
 
-    # ---------------- stragglers / elastic ----------------
-    def _maybe_refresh_rates(self):
-        """Fold observed slowdowns into mu; re-solve on material change."""
-        factors = self.tracker.slowdown_factors()
-        new_mu = self._base_mu * factors[None, :]
-        rel = np.abs(new_mu - self.mu) / np.maximum(self.mu, 1e-12)
-        if rel.max() > self._resolve_threshold:
-            self.mu = new_mu
-            self._target_key = None            # force re-solve on next route
-
-    def pool_lost(self, pool: int):
-        """Elastic: a pool died; zero its column and re-solve. In-flight
-        tasks on the pool are the caller's to re-enqueue."""
+    def notify_type_counts(self, n_tasks: np.ndarray) -> None:
         with self._lock:
-            self.mu = np.delete(self.mu, pool, axis=1)
-            self._base_mu = np.delete(self._base_mu, pool, axis=1)
-            self.counts = np.delete(self.counts, pool, axis=1)
-            self.l -= 1
-            self._target_key = None
-            t = self.tracker
-            t.rates = np.delete(t.rates, pool)
-            t.seen = np.delete(t.seen, pool)
+            self.core.notify_type_counts(n_tasks)
 
-    def pool_added(self, mu_column: np.ndarray):
+    def pool_lost(self, pool: int) -> None:
         with self._lock:
-            self.mu = np.concatenate([self.mu, mu_column[:, None]], axis=1)
-            self._base_mu = np.concatenate(
-                [self._base_mu, mu_column[:, None]], axis=1)
-            self.counts = np.concatenate(
-                [self.counts, np.zeros((self.k, 1), np.int64)], axis=1)
-            self.l += 1
-            self._target_key = None
-            t = self.tracker
-            t.rates = np.append(t.rates, 0.0)
-            t.seen = np.append(t.seen, False)
+            self.core.pool_lost(pool)
+
+    def pool_added(self, mu_column: np.ndarray) -> None:
+        with self._lock:
+            self.core.pool_added(mu_column)
+
+    # ---------------- read-only views ----------------
+    @property
+    def name(self) -> str:
+        return self.core.name
+
+    @property
+    def policy(self):
+        return self.core.policy
+
+    @property
+    def mu(self) -> np.ndarray:
+        return self.core.mu
+
+    @property
+    def base_mu(self) -> np.ndarray:
+        return self.core.base_mu
+
+    @property
+    def counts(self) -> np.ndarray:
+        return self.core.counts
+
+    @property
+    def tracker(self):
+        return self.core.tracker
+
+    @property
+    def resolves(self) -> int:
+        return self.core.resolves
+
+    @property
+    def k(self) -> int:
+        return self.core.k
+
+    @property
+    def l(self) -> int:
+        return self.core.l
 
 
 def run_closed_loop(cluster, scheduler: ClusterScheduler, task_types,

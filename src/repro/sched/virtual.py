@@ -15,11 +15,12 @@ of the same interfaces.
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import time
 from typing import Callable
 
 import numpy as np
+
+from repro.sched.api import Policy, SchedulerCore, as_core
 
 
 @dataclasses.dataclass
@@ -61,8 +62,24 @@ class VirtualTimeCluster:
 
     def run_closed(self, scheduler, task_types, *, n_completions: int = 400,
                    warmup: int = 80, size_fn: Callable = lambda t: 1.0,
-                   feed_tracker: bool = False) -> VirtualMetrics:
-        """Closed system with N = len(task_types) programs."""
+                   feed_tracker: bool = False,
+                   mu: np.ndarray | None = None) -> VirtualMetrics:
+        """Closed system with N = len(task_types) programs.
+
+        `scheduler` is anything with route/complete (a SchedulerCore or the
+        thread-safe ClusterScheduler wrapper), or a policy registry name /
+        Policy instance — then `mu` (e.g. from measure_rates) is required to
+        build the SchedulerCore here.
+        """
+        if isinstance(scheduler, (str, Policy)):
+            if mu is None:
+                raise ValueError("pass mu= when giving a policy name; "
+                                 "e.g. run_closed('cab', ..., mu=measured_mu)")
+            scheduler = as_core(scheduler, mu)
+        elif mu is not None:
+            raise ValueError("mu= only applies when scheduler is a policy "
+                             "name/Policy; the given scheduler already owns "
+                             "its rates")
         clocks = np.zeros(self.l)                    # per-pool virtual time
         queues: list[list] = [[] for _ in range(self.l)]  # FCFS
         enter_t = {}

@@ -1,0 +1,2 @@
+"""Serving engine (prefill + decode tasks the scheduler dispatches)."""
+from repro.serve.engine import ServeEngine

@@ -32,6 +32,15 @@ class ServeEngine:
         logits, cache = self._prefill(self.params, batch)
         return logits, cache
 
+    def _greedy_next(self, logits):
+        """Greedy token from last-position logits: (emitted, feed) where
+        `emitted` is (B,) — or (B, K) for audio codebooks — and `feed` has the
+        trailing length-1 axis `decode_step` expects."""
+        nxt = jnp.argmax(logits[:, -1], axis=-1)
+        if self.cfg.family == "audio":
+            return nxt, nxt[:, :, None].astype(jnp.int32)
+        return nxt, nxt[:, None].astype(jnp.int32)
+
     def decode_run(self, first_token, cache, start_pos: int, steps: int):
         """Greedy-decode `steps` tokens. Returns (tokens, cache)."""
         tok = first_token
@@ -40,12 +49,7 @@ class ServeEngine:
         for _ in range(steps):
             logits, cache = self._decode(self.params, tok, cache,
                                          jnp.asarray(pos, jnp.int32))
-            if self.cfg.family == "audio":
-                nxt = jnp.argmax(logits[:, -1], axis=-1)      # (B, K)
-                tok = nxt[:, :, None].astype(jnp.int32)
-            else:
-                nxt = jnp.argmax(logits[:, -1], axis=-1)      # (B,)
-                tok = nxt[:, None].astype(jnp.int32)
+            nxt, tok = self._greedy_next(logits)
             out.append(nxt)
             pos += 1
         return jnp.stack(out, axis=1), cache
@@ -53,16 +57,12 @@ class ServeEngine:
     def generate(self, batch: dict, steps: int):
         """prefill + greedy decode; returns generated token ids."""
         logits, cache = self.prefill(batch)
+        first, feed = self._greedy_next(logits)
         if self.cfg.family == "audio":
-            first = jnp.argmax(logits[:, -1], -1)[:, :, None].astype(jnp.int32)
             start = batch["tokens"].shape[-1]
         else:
-            first = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
             start = batch["tokens"].shape[1]
             if self.cfg.family == "vlm" and "patch_embeds" in batch:
                 start += batch["patch_embeds"].shape[1]
-        toks, cache = self.decode_run(first, cache, start, steps - 1)
-        first_axis = first[:, None] if self.cfg.family != "audio" else first[:, None, :, 0]
-        return jnp.concatenate([
-            first[:, None, ...].reshape(toks.shape[0], 1, *toks.shape[2:]),
-            toks], axis=1)
+        toks, cache = self.decode_run(feed, cache, start, steps - 1)
+        return jnp.concatenate([first[:, None], toks], axis=1)

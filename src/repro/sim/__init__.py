@@ -2,6 +2,7 @@
 from repro.sim.distributions import (BoundedPareto, Constant, Exponential,
                                      TaskSizeDistribution, Uniform,
                                      make_distribution, DISTRIBUTIONS)
-from repro.sim.simulator import ClosedNetworkSimulator, SimConfig, SimMetrics
+from repro.sim.simulator import (ClosedNetworkSimulator, SimConfig,
+                                 SimMetrics, run_policy_sweep)
 
 __all__ = [s for s in dir() if not s.startswith("_")]

@@ -21,7 +21,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.affinity import PowerModel, PROPORTIONAL_POWER
-from repro.core.policies import Dispatcher, SystemView
+from repro.sched.api import Policy, SchedulerCore, SystemView, as_core
 from repro.sim.distributions import TaskSizeDistribution
 
 _INF = float("inf")
@@ -63,8 +63,11 @@ class ClosedNetworkSimulator:
         self.k, self.l = self.mu.shape
         self.P = cfg.power.power_matrix(self.mu)
 
-    def run(self, dispatcher: Dispatcher) -> SimMetrics:
+    def run(self, policy: str | Policy | SchedulerCore) -> SimMetrics:
+        """Simulate under a policy: a registry name ("cab", "grin", "lb",
+        ...), a Policy instance, or a prebuilt SchedulerCore (reset here)."""
         cfg = self.cfg
+        core = as_core(policy, self.mu)
         rng = np.random.default_rng(cfg.seed)
         n_per_type = np.asarray(cfg.n_programs_per_type, dtype=np.int64)
         n_prog = int(n_per_type.sum())
@@ -79,11 +82,11 @@ class ClosedNetworkSimulator:
         entry_time = np.zeros(n_prog)
         service_need = np.zeros(n_prog)     # total alone-seconds (for energy)
 
-        counts = np.zeros((self.k, self.l), dtype=np.int64)
         proc_tasks: list[list[int]] = [[] for _ in range(self.l)]  # FCFS order
 
-        dispatcher.reset(self.mu, n_per_type if cfg.type_mix is None
-                         else np.bincount(task_type, minlength=self.k))
+        core.reset(self.mu, n_per_type if cfg.type_mix is None
+                   else np.bincount(task_type, minlength=self.k))
+        counts = core.counts                # maintained by route/complete
 
         def view() -> SystemView:
             backlog_work = np.zeros(self.l)
@@ -98,14 +101,13 @@ class ClosedNetworkSimulator:
 
         def admit(pid: int, now: float) -> None:
             t = int(task_type[pid])
-            j = dispatcher.choose(t, view(), rng)
+            j = core.route(t, view=view(), rng=rng)   # updates counts
             s = float(cfg.distribution.sample(rng, 1)[0])
             task_proc[pid] = j
             service_need[pid] = s / self.mu[t, j]
             remaining[pid] = service_need[pid]
             size_left[pid] = s
             entry_time[pid] = now
-            counts[t, j] += 1
             proc_tasks[j].append(pid)
 
         for pid in range(n_prog):
@@ -172,7 +174,7 @@ class ClosedNetworkSimulator:
                 pid = proc_tasks[j][0]
             t = int(task_type[pid])
             proc_tasks[j].remove(pid)
-            counts[t, j] -= 1
+            core.complete(t, j)
             completed += 1
 
             in_window = completed > cfg.warmup_completions
@@ -188,7 +190,7 @@ class ClosedNetworkSimulator:
             # ---- the program's next task enters immediately (closed) ----
             if cfg.type_mix is not None:
                 task_type[pid] = rng.choice(self.k, p=cfg.type_mix)
-                dispatcher.notify_type_counts(
+                core.notify_type_counts(
                     np.bincount(task_type, minlength=self.k))
             admit(pid, now)
 
@@ -203,7 +205,18 @@ class ClosedNetworkSimulator:
                           state_occupancy=occ)
 
 
-def run_policy_sweep(cfg: SimConfig, dispatchers) -> dict[str, SimMetrics]:
-    """Run the same workload under each dispatcher (same seed => same sizes)."""
+def run_policy_sweep(cfg: SimConfig, policies) -> dict[str, SimMetrics]:
+    """Run the same workload under each policy (same seed => same sizes).
+
+    `policies` is an iterable of registry names, Policy instances, or
+    SchedulerCores; results are keyed by display name ("CAB", "GrIn", ...).
+    """
     sim = ClosedNetworkSimulator(cfg)
-    return {d.name: sim.run(d) for d in dispatchers}
+    out: dict[str, SimMetrics] = {}
+    for c in (as_core(p, cfg.mu) for p in policies):
+        key, n = c.name, 2
+        while key in out:                       # e.g. two 'Opt' variants
+            key = f"{c.name}#{n}"
+            n += 1
+        out[key] = sim.run(c)
+    return out

@@ -1,0 +1,1 @@
+"""Training stack: data, optimizer, train step, checkpoint, fault tolerance."""

@@ -2,7 +2,7 @@
 (Lemma 8), closed forms (eq. 16-18), energy identities (eq. 22-23)."""
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _prop import given, st
 
 import jax.numpy as jnp
 

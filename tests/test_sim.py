@@ -2,9 +2,10 @@
 independence (Lemma 3), distribution means."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
-from repro.core import CABDispatcher, cab_solve, make_policies
+from repro.core import cab_solve
+from repro.sched import get_policy
 from repro.sim import (ClosedNetworkSimulator, SimConfig, make_distribution,
                        DISTRIBUTIONS)
 
@@ -34,45 +35,46 @@ def test_littles_law(dist, n1):
     cfg = _cfg(distribution=make_distribution(dist),
                n_programs_per_type=np.array([n1, 20 - n1]),
                n_completions=2500, warmup_completions=500)
-    m = ClosedNetworkSimulator(cfg).run(CABDispatcher())
+    m = ClosedNetworkSimulator(cfg).run("cab")
     assert m.little_product == pytest.approx(20, rel=0.08)
 
 
 def test_cab_matches_theory():
     sol = cab_solve(MU, 10, 10)
-    m = ClosedNetworkSimulator(_cfg(n_completions=6000)).run(CABDispatcher())
+    m = ClosedNetworkSimulator(_cfg(n_completions=6000)).run("cab")
     assert m.throughput == pytest.approx(sol.x_max, rel=0.05)
 
 
 def test_cab_beats_all_policies():
     sim = ClosedNetworkSimulator(_cfg())
-    xs = {d.name: sim.run(d).throughput for d in make_policies("2type")}
+    xs = {d.name: sim.run(d).throughput
+          for d in map(get_policy, ("cab", "rd", "bf", "lb", "jsq"))}
     assert xs["CAB"] >= max(xs.values()) * 0.98
 
 
 def test_order_independence_lemma3():
     """PS and FCFS give the same CAB time-average throughput."""
-    x_ps = ClosedNetworkSimulator(_cfg(order="PS")).run(CABDispatcher())
-    x_fcfs = ClosedNetworkSimulator(_cfg(order="FCFS")).run(CABDispatcher())
+    x_ps = ClosedNetworkSimulator(_cfg(order="PS")).run("cab")
+    x_fcfs = ClosedNetworkSimulator(_cfg(order="FCFS")).run("cab")
     assert x_ps.throughput == pytest.approx(x_fcfs.throughput, rel=0.06)
 
 
 def test_occupancy_tracks_smax():
     """Time-averaged state under CAB stays near S_max = (1, N2)."""
-    m = ClosedNetworkSimulator(_cfg(n_completions=5000)).run(CABDispatcher())
+    m = ClosedNetworkSimulator(_cfg(n_completions=5000)).run("cab")
     occ = m.state_occupancy
     assert occ[0, 0] == pytest.approx(1.0, abs=0.35)   # one P1-task on P1
     assert occ[1, 0] == pytest.approx(0.0, abs=0.25)   # no P2-tasks on P1
 
 
 def test_proportional_power_energy_identity():
-    m = ClosedNetworkSimulator(_cfg()).run(CABDispatcher())
+    m = ClosedNetworkSimulator(_cfg()).run("cab")
     assert m.mean_energy == pytest.approx(1.0, rel=0.05)   # eq. 23
 
 
 def test_piecewise_closed_type_mix():
     """Dispatchers adapt when task types are re-drawn per arrival."""
     cfg = _cfg(type_mix=np.array([0.5, 0.5]), n_completions=2500)
-    m = ClosedNetworkSimulator(cfg).run(CABDispatcher())
+    m = ClosedNetworkSimulator(cfg).run("cab")
     assert m.little_product == pytest.approx(20, rel=0.1)
     assert m.throughput > 0
