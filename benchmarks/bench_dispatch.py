@@ -1,0 +1,165 @@
+"""Dispatch/simulation engine benchmarks (PR 2 acceptance numbers).
+
+Three measurements, emitted as CSV rows and recorded in BENCH_pr2.json:
+
+  * host core events/sec on the Fig. 9 workload (3x3, N=30, GrIn, PS) vs an
+    embedded copy of the pre-PR O(l*N)-per-event loop (same machine, same
+    SchedulerCore, so the ratio isolates the event-core rewrite);
+  * SchedulerCore.route_many routes/sec (jitted largest-deficit kernel) vs
+    sequential `route` calls;
+  * wall-time of a 64-point (mix x seed) policy sweep on the vmapped JAX
+    engine vs the same 64 runs executed serially on the host core.
+
+Usage: PYTHONPATH=src python -m benchmarks.bench_dispatch [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import Timer, emit, save_json
+from repro.core import random_affinity_matrix
+from repro.sched.api import SchedulerCore, as_core
+from repro.sim import (ClosedNetworkSimulator, SimConfig, make_distribution,
+                       sweep_jax)
+
+_REPEATS = 3        # best-of-N: the container CPU is noisy/shared
+
+
+def _best_rate(fn, units: float) -> float:
+    """Max units/sec over _REPEATS timed calls (first call warms caches)."""
+    fn()
+    best = 0.0
+    for _ in range(_REPEATS):
+        with Timer() as t:
+            fn()
+        best = max(best, units / t.dt)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Pre-PR baseline: the O(l*N)-per-event loop is retained verbatim inside the
+# simulator as the SystemView compat path; forcing a target policy through it
+# reproduces the pre-refactor cost structure (full per-event rescans, a
+# SystemView rebuilt on every admit, list.remove) on the same machine.
+# ---------------------------------------------------------------------------
+
+def legacy_run(cfg: SimConfig, policy):
+    sim = ClosedNetworkSimulator(cfg)
+    return sim._run_compat(as_core(policy, sim.mu))
+
+
+def _fig9_cfg(n_completions: int) -> SimConfig:
+    rng = np.random.default_rng(3)
+    mu = random_affinity_matrix(rng, 3, 3)
+    return SimConfig(mu=mu, n_programs_per_type=np.array([10, 10, 10]),
+                     distribution=make_distribution("exponential"),
+                     order="PS", n_completions=n_completions,
+                     warmup_completions=n_completions // 10, seed=0)
+
+
+def run(smoke: bool = False) -> dict:
+    n_host = 8_000 if smoke else 60_000
+    n_legacy = 3_000 if smoke else 20_000
+    n_routes = 10_000 if smoke else 100_000
+    n_routes_seq = 3_000 if smoke else 20_000
+    sweep_points = (4, 2) if smoke else (16, 4)       # (mixes, seeds)
+    n_sweep = 800 if smoke else 3_000
+
+    payload: dict = {"smoke": smoke}
+
+    # ---- 1. host event core vs pre-PR loop --------------------------------
+    cfg = _fig9_cfg(n_host)
+    sim = ClosedNetworkSimulator(cfg)
+    host_eps = _best_rate(lambda: sim.run("grin"), n_host)
+    lcfg = _fig9_cfg(n_legacy)
+    legacy_eps = _best_rate(lambda: legacy_run(lcfg, "grin"), n_legacy)
+    payload["host_events_per_sec"] = host_eps
+    payload["legacy_events_per_sec"] = legacy_eps
+    payload["host_core_speedup"] = host_eps / legacy_eps
+    emit("dispatch_host_core", 1e6 / host_eps,
+         f"events/s={host_eps:,.0f};legacy={legacy_eps:,.0f};"
+         f"speedup={host_eps / legacy_eps:.1f}x")
+
+    # ---- 2. route_many vs sequential route --------------------------------
+    mu = cfg.mu
+    mix = np.array([10, 10, 10])
+    rng = np.random.default_rng(0)
+    types = rng.integers(0, 3, size=n_routes).astype(np.int32)
+    core = SchedulerCore("grin", mu).reset(mu, mix)
+
+    def _many():
+        core.reset(mu, mix)
+        core.route_many(types)
+
+    many_rps = _best_rate(_many, n_routes)
+    seq = types[:n_routes_seq]
+
+    def _seq():
+        core.reset(mu, mix)
+        for tt in seq:
+            core.route(int(tt))
+
+    seq_rps = _best_rate(_seq, n_routes_seq)
+    payload["route_many_routes_per_sec"] = many_rps
+    payload["sequential_routes_per_sec"] = seq_rps
+    payload["route_many_speedup"] = many_rps / seq_rps
+    emit("dispatch_route_many", 1e6 / many_rps,
+         f"routes/s={many_rps:,.0f};sequential={seq_rps:,.0f};"
+         f"speedup={many_rps / seq_rps:.1f}x")
+
+    # ---- 3. vmapped sweep vs serial host runs -----------------------------
+    n_mix, n_seed = sweep_points
+    rng = np.random.default_rng(1)
+    mixes = rng.multinomial(30, [1 / 3] * 3, size=n_mix)
+    seeds = list(range(n_seed))
+    scfg = _fig9_cfg(n_sweep)
+    with Timer() as t:
+        sweep_jax(scfg, "grin", mixes=mixes, seeds=seeds)
+    payload["sweep_jax_cold_s"] = t.dt                 # cold: includes jit
+    res = None
+
+    def _jax_sweep():
+        nonlocal res
+        _, res = sweep_jax(scfg, "grin", mixes=mixes, seeds=seeds)
+
+    jax_s = 1.0 / _best_rate(_jax_sweep, 1.0)
+
+    def _host_serial():
+        for mix in mixes:
+            for s in seeds:
+                host_cfg = SimConfig(
+                    mu=scfg.mu, n_programs_per_type=mix,
+                    distribution=scfg.distribution, order=scfg.order,
+                    n_completions=n_sweep,
+                    warmup_completions=scfg.warmup_completions, seed=s)
+                ClosedNetworkSimulator(host_cfg).run("grin")
+
+    host_s = 1.0 / _best_rate(_host_serial, 1.0)
+    n_points = n_mix * n_seed
+    payload["sweep_points"] = n_points
+    payload["sweep_jax_s"] = jax_s
+    payload["sweep_host_serial_s"] = host_s
+    payload["sweep_speedup"] = host_s / jax_s
+    payload["sweep_mean_throughput"] = float(res["throughput"].mean())
+    emit("dispatch_sweep", jax_s * 1e6 / n_points,
+         f"points={n_points};jax={jax_s:.2f}s;host_serial={host_s:.2f}s;"
+         f"speedup={host_s / jax_s:.1f}x")
+
+    save_json("bench_dispatch", payload)
+    if not smoke:
+        with open(os.path.join(os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__))), "BENCH_pr2.json"), "w") as f:
+            json.dump(payload, f, indent=1)
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized invocation (no BENCH_pr2.json rewrite)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

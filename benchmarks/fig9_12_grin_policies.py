@@ -1,21 +1,33 @@
 """Figs. 9-12: GrIn vs BF/RD/JSQ/LB + exhaustive Opt on 3x3 systems under
 four distributions. Claim: GrIn beats the classic policies and averages
-within ~1.6% of Opt (paper: 1.6% over 1000 runs)."""
+within ~1.6% of Opt (paper: 1.6% over 1000 runs).
+
+Set REPRO_SIM_ENGINE=jax (or pass engine="jax") to run the target policies
+(GrIn, pinned Opt) on the batched device engine; the SystemView baselines
+always use the host core. Host is the default for two reasons: per-point
+populations vary, so a CPU-only container pays one jit per shape, which
+dwarfs these small sims; and on "jax" the GrIn-vs-baseline rows become
+UNPAIRED (device vs NumPy random streams), so grin_beats_baselines carries
+per-sample sampling noise that the paired host comparison cancels.
+"""
 from __future__ import annotations
+
+import os
 
 import numpy as np
 
 from benchmarks.common import Timer, emit, save_json
 from repro.core import exhaustive_solve, grin_solve, random_affinity_matrix
 from repro.sched import get_policy
-from repro.sim import ClosedNetworkSimulator, SimConfig, make_distribution
+from repro.sim import SimConfig, make_distribution, run_policy_sweep
 
 DISTS = ["exponential", "bounded_pareto", "uniform", "constant"]
 POLICIES = ("grin", "rd", "bf", "lb", "jsq")
 
 
 def run(n_samples: int = 10, n_static: int = 200, n_completions: int = 4000,
-        seed: int = 3):
+        seed: int = 3, engine: str | None = None):
+    engine = engine or os.environ.get("REPRO_SIM_ENGINE", "host")
     rng = np.random.default_rng(seed)
 
     # ---- static optimality gap over many random systems (paper: 1000) ----
@@ -40,20 +52,20 @@ def run(n_samples: int = 10, n_static: int = 200, n_completions: int = 4000,
                                 distribution=make_distribution(dist),
                                 order="PS", n_completions=n_completions,
                                 warmup_completions=800, seed=seed + s)
-                sim = ClosedNetworkSimulator(cfg)
-                row = {"sample": s, "dist": dist}
                 pols = [get_policy(n) for n in POLICIES]
                 pols.append(get_policy("fixed", target=opt_n))  # precomputed Opt
-                for d in pols:
-                    m = sim.run(d)
-                    row[d.name] = m.throughput
+                row = {"sample": s, "dist": dist}
+                for name, m in run_policy_sweep(cfg, pols,
+                                                engine=engine).items():
+                    row[name] = m.throughput
                 sim_rows.append(row)
 
     grin_wins = sum(1 for r in sim_rows
                     if r["GrIn"] >= max(r[p] for p in
                                         ("BF", "RD", "JSQ", "LB")) * 0.98)
     grin_vs_opt = [r["GrIn"] / r["Opt"] for r in sim_rows]
-    payload = {"static_mean_gap": mean_gap,
+    payload = {"engine": engine,
+               "static_mean_gap": mean_gap,
                "static_max_gap": float(np.max(gaps)),
                "paper_gap": 0.016,
                "grin_beats_baselines": grin_wins / len(sim_rows),

@@ -18,12 +18,13 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (fig4_7_cab_policies, fig8_theory_vs_sim,
-                            fig9_12_grin_policies, fig13_grin_vs_slsqp,
-                            fig14_runtime, fig15_16_real_platform,
-                            grin_plus_gap, roofline)
+    from benchmarks import (bench_dispatch, fig4_7_cab_policies,
+                            fig8_theory_vs_sim, fig9_12_grin_policies,
+                            fig13_grin_vs_slsqp, fig14_runtime,
+                            fig15_16_real_platform, grin_plus_gap, roofline)
 
     jobs = {
+        "dispatch": lambda: bench_dispatch.run(smoke=args.fast),
         "fig4_7": lambda: fig4_7_cab_policies.run(
             n_completions=2500 if args.fast else 5000,
             warmup=500 if args.fast else 1000),

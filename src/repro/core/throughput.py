@@ -46,6 +46,20 @@ def system_throughput_jax(N: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(col > 0, num / jnp.maximum(col, 1.0), 0.0).sum()
 
 
+def column_throughputs_jax(N: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
+    """Per-processor X_j on device (eq. 26); empty columns contribute 0."""
+    N = N.astype(jnp.float32)
+    col = N.sum(axis=0)
+    num = (mu * N).sum(axis=0)
+    return jnp.where(col > 0, num / jnp.maximum(col, 1.0), 0.0)
+
+
+def system_throughput_batch_jax(Ns: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
+    """X_sys for a (B, k, l) batch of states under one mu — the on-device
+    inner product used by batched target solving and sweep scoring."""
+    return jax.vmap(lambda N: system_throughput_jax(N, mu))(Ns)
+
+
 def state_from_pair(n11: int, n22: int, n1: int, n2: int) -> np.ndarray:
     """2x2 state matrix from the (N11, N22) pair (paper Definition 5)."""
     return np.array([[n11, n1 - n11], [n2 - n22, n22]], dtype=np.int64)

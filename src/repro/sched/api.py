@@ -26,6 +26,8 @@ Policies are constructed through a string registry:
 
 `solve_targets_jax` batches target re-solves over many type-mixes on device
 (vmap of `grin_solve_jax`) for policy sweeps and piecewise-closed operation.
+`SchedulerCore.route_many` routes a whole burst of arrivals through one
+jit-compiled largest-deficit kernel for fleet-scale dispatch rates.
 """
 from __future__ import annotations
 
@@ -41,7 +43,7 @@ from repro.core.exhaustive import exhaustive_solve
 from repro.core.grin import grin_solve, grin_solve_jax
 from repro.core.grin_plus import grin_multistart_solve
 from repro.core.slsqp import round_largest_remainder, slsqp_solve
-from repro.core.throughput import system_throughput_jax
+from repro.core.throughput import system_throughput_batch_jax
 from repro.train.fault_tolerance import StragglerTracker
 
 
@@ -256,7 +258,7 @@ class JoinShortestQueuePolicy(Policy):
 @jax.jit
 def _solve_targets_jax(mu: jnp.ndarray, mixes: jnp.ndarray):
     targets = jax.vmap(lambda nt: grin_solve_jax(mu, nt))(mixes)
-    xs = jax.vmap(lambda N: system_throughput_jax(N, mu))(targets)
+    xs = system_throughput_batch_jax(targets, mu)
     return targets, xs
 
 
@@ -276,6 +278,46 @@ def solve_targets_jax(mu, n_tasks_batch):
                          f"{tuple(mixes.shape)}")
     targets, xs = _solve_targets_jax(mu, mixes)
     return (np.asarray(targets).round().astype(np.int64), np.asarray(xs))
+
+
+# ---------------------------------------------------------------------------
+# Jitted largest-deficit routing kernel (fleet-scale dispatch)
+# ---------------------------------------------------------------------------
+
+def _mu_tiebreak_ranks(mu: np.ndarray) -> np.ndarray:
+    """Per-row preference rank of each pool: 0 = largest mu, ties broken by
+    the lower pool index. Computed in float64 on the host so the jitted
+    kernel's tie-breaks match `route` exactly (no float32 collisions)."""
+    order = np.argsort(-np.asarray(mu, dtype=np.float64), axis=1, kind="stable")
+    rank = np.empty_like(order)
+    rank[np.arange(mu.shape[0])[:, None], order] = np.arange(mu.shape[1])
+    return rank.astype(np.int32)
+
+
+def deficit_route_jax(target, rank, counts, t):
+    """One largest-deficit routing decision on device: the pool index for an
+    arriving t-type task. combined = deficit * l - rank is a strict
+    lexicographic key over (deficit desc, mu desc, pool index asc) because
+    rank < l, so argmax reproduces the host rule decision-for-decision.
+    Every on-device router (route_many, the engine_jax event core) MUST go
+    through this helper so their decisions stay identical."""
+    deficit = target[t] - counts[t]
+    return jnp.argmax(deficit * target.shape[1] - rank[t])
+
+
+@jax.jit
+def _route_many_kernel(target, rank, counts0, types, valid):
+    """Sequential largest-deficit dispatch of a burst, on device. `types` is
+    bucket-padded (see route_many) so varying burst sizes reuse the same
+    compiled program; padded tail entries carry valid=False and leave the
+    counts untouched."""
+    def step(counts, tv):
+        t, v = tv
+        j = deficit_route_jax(target, rank, counts, t)
+        return counts.at[t, j].add(jnp.where(v, 1, 0)), j
+
+    # unroll amortizes the XLA while-loop overhead on tiny step bodies
+    return jax.lax.scan(step, counts0, (types, valid), unroll=8)
 
 
 # ---------------------------------------------------------------------------
@@ -314,26 +356,39 @@ class SchedulerCore:
         self.reset(mu)
 
     # ---------------- lifecycle ----------------
+    def _set_mu(self, mu: np.ndarray) -> None:
+        """Install a new affinity matrix: scalar mirrors for the hot route
+        path, a monotone version token for target-cache keys, and pinned-
+        target invalidation. All mu changes MUST go through here."""
+        self.mu = mu
+        self.k, self.l = mu.shape
+        self._mu_rows = mu.tolist()
+        self._inv_mu_rows = [[1.0 / v for v in row] for row in self._mu_rows]
+        self._mu_token = getattr(self, "_mu_token", 0) + 1
+        self._pinned_rows = None            # target rows for (mix, mu), lazy
+        self._ranks = None                  # route_many tie-break ranks, lazy
+
     def reset(self, mu: np.ndarray | None = None,
               n_tasks: np.ndarray | None = None) -> "SchedulerCore":
         """Zero live state (counts, backlog, EWMA, cache); optionally install
         a new affinity matrix and pin the initial type mix."""
         if mu is not None:
-            self.mu = np.asarray(mu, dtype=np.float64)
-            if self.policy.pool_limit not in (None, self.mu.shape[1]):
+            mu = np.asarray(mu, dtype=np.float64)
+            if self.policy.pool_limit not in (None, mu.shape[1]):
                 raise ValueError(
                     f"{self.policy.name} requires exactly "
-                    f"{self.policy.pool_limit} pools; got {self.mu.shape[1]}")
-        elif hasattr(self, "base_mu"):
-            self.mu = self.base_mu.copy()   # drop EWMA folding: back to nominal
-        self.k, self.l = self.mu.shape
+                    f"{self.policy.pool_limit} pools; got {mu.shape[1]}")
+            self._set_mu(mu)
+        else:
+            self._set_mu(self.base_mu.copy())  # drop EWMA folding: to nominal
         self.base_mu = self.mu.copy()
-        self.counts = np.zeros((self.k, self.l), dtype=np.int64)
-        self.backlog_work = np.zeros(self.l)
+        self._counts_rows = [[0] * self.l for _ in range(self.k)]
+        self._backlog = [0.0] * self.l
         self.tracker = StragglerTracker(self.l, alpha=self._rate_alpha)
         self._rng = np.random.default_rng(self._seed)
         self._targets: dict[tuple, np.ndarray] = {}
         self._mix: np.ndarray | None = None
+        self._mix_key: tuple | None = None
         self.resolves = 0
         if n_tasks is not None:
             self.notify_type_counts(n_tasks)
@@ -343,36 +398,71 @@ class SchedulerCore:
     def name(self) -> str:
         return self.policy.name
 
+    @property
+    def counts(self) -> np.ndarray:
+        """(k, l) live placement. A snapshot: the hot route/complete path
+        maintains scalar rows internally and materializes the array on
+        access."""
+        return np.asarray(self._counts_rows, dtype=np.int64)
+
+    @property
+    def backlog_work(self) -> np.ndarray:
+        """(l,) expected remaining seconds routed to each pool (snapshot)."""
+        return np.asarray(self._backlog, dtype=np.float64)
+
     # ---------------- target maintenance ----------------
-    def _target_for(self, n_tasks: np.ndarray) -> np.ndarray:
-        key = (tuple(int(x) for x in n_tasks), self.mu.tobytes())
+    def _cache_put(self, key: tuple, target: np.ndarray) -> None:
+        if len(self._targets) >= _CACHE_CAP:
+            # FIFO: evict the single oldest entry (dicts preserve insertion
+            # order) rather than wiping the whole cache.
+            self._targets.pop(next(iter(self._targets)))
+        self._targets[key] = target
+
+    def _target_for(self, n_tasks: np.ndarray,
+                    key_hint: tuple | None = None) -> np.ndarray:
+        key = ((tuple(int(x) for x in n_tasks) if key_hint is None
+                else key_hint), self._mu_token)
         hit = self._targets.get(key)
         if hit is None:
-            if len(self._targets) >= _CACHE_CAP:
-                self._targets.clear()
             hit = np.asarray(self.policy.solve_target(self.mu, np.asarray(n_tasks)))
             if hit.shape != (self.k, self.l):
                 raise ValueError(
                     f"{self.policy.name} target shape {hit.shape} does not "
                     f"match the current ({self.k}, {self.l}) topology (fixed "
                     "targets must be re-pinned after pool_lost/pool_added)")
-            self._targets[key] = hit
+            self._cache_put(key, hit)
             self.resolves += 1
         return hit
 
     def notify_type_counts(self, n_tasks: np.ndarray) -> None:
         """Piecewise-closed operation: the in-flight type mix changed (or is
         externally known, e.g. a closed population). Pins the mix used for
-        target solving until the next notify/reset."""
-        self._mix = np.asarray(n_tasks, dtype=np.int64)
+        target solving until the next notify/reset. The mix is snapshotted
+        here (keyed once), so later caller-side mutation of the array has no
+        effect until the next notify."""
+        key = tuple(int(x) for x in n_tasks)
+        if key == self._mix_key:
+            return                          # unchanged: keep pinned target
+        self._mix = np.asarray(key, dtype=np.int64)
+        self._mix_key = key
+        self._pinned_rows = None
+
+    def _pinned_target_rows(self) -> list:
+        """Scalar rows of the target for the pinned mix under the current mu
+        (the hot path of the simulator's closed populations)."""
+        rows = self._pinned_rows
+        if rows is None:
+            rows = self._target_for(self._mix, key_hint=self._mix_key).tolist()
+            self._pinned_rows = rows
+        return rows
 
     def warm_targets(self, mixes) -> int:
         """Pre-solve targets for many type mixes. Policies that support it
         batch on device via `solve_targets_jax`; others loop the host solver.
         Returns the number of targets inserted during this call. The cache
-        holds at most _CACHE_CAP entries (it is cleared and refilled past
-        that), so warming more than the cap keeps only the tail of `mixes`
-        cached; earlier mixes re-solve lazily on the host.
+        holds at most _CACHE_CAP entries with FIFO eviction, so warming more
+        than the cap keeps the most recently warmed mixes cached and earlier
+        ones re-solve lazily on the host.
 
         The batched path uses the steepest-ascent JAX solver, so a warmed
         mix can pin a different (same-quality-class) local maximum than the
@@ -382,15 +472,12 @@ class SchedulerCore:
         mixes = np.asarray(mixes, dtype=np.int64)
         if self.policy.supports_jax_batch and self.policy.needs_target:
             targets, _ = solve_targets_jax(self.mu, mixes)
-            mu_key = self.mu.tobytes()
             added = 0
             for mix, N in zip(mixes, targets):
-                key = (tuple(int(x) for x in mix), mu_key)
+                key = (tuple(int(x) for x in mix), self._mu_token)
                 if key in self._targets:
                     continue
-                if len(self._targets) >= _CACHE_CAP:
-                    self._targets.clear()
-                self._targets[key] = N
+                self._cache_put(key, N)
                 added += 1
             return added
         before = self.resolves
@@ -400,8 +487,9 @@ class SchedulerCore:
 
     # ---------------- routing ----------------
     def _internal_view(self) -> SystemView:
-        return SystemView(counts=self.counts, backlog_work=self.backlog_work,
-                          backlog_tasks=self.counts.sum(axis=0), mu=self.mu)
+        counts = self.counts
+        return SystemView(counts=counts, backlog_work=self.backlog_work,
+                          backlog_tasks=counts.sum(axis=0), mu=self.mu)
 
     def route(self, task_type: int, view: SystemView | None = None,
               rng: np.random.Generator | None = None) -> int:
@@ -412,31 +500,86 @@ class SchedulerCore:
         `rng` lets a driver own the random stream (reproducible sweeps).
         """
         if self.policy.needs_target:
-            if self._mix is not None:
-                mix = self._mix
+            if view is None and self._mix_key is not None:
+                # Hot path (pinned mix, own counts): scalar largest-deficit
+                # with rate tiebreak — decision-identical to the array path.
+                rows = self._pinned_rows
+                if rows is None:
+                    rows = self._pinned_target_rows()
+                trow = rows[task_type]
+                crow = self._counts_rows[task_type]
+                mrow = self._mu_rows[task_type]
+                best_d = trow[0] - crow[0]
+                best_m = mrow[0]
+                j = 0
+                for jj in range(1, self.l):
+                    d = trow[jj] - crow[jj]
+                    if d > best_d or (d == best_d and mrow[jj] > best_m):
+                        best_d, best_m, j = d, mrow[jj], jj
             else:
-                mix = self.counts.sum(axis=1)
-                mix[task_type] += 1            # include the arriving task
-            target = self._target_for(mix)
-            counts = view.counts if view is not None else self.counts
-            deficit = target[task_type] - counts[task_type]
-            best = np.flatnonzero(deficit == deficit.max())
-            j = int(best[np.argmax(self.mu[task_type][best])])
+                counts = view.counts if view is not None else self.counts
+                if self._mix is not None:
+                    target = self._target_for(self._mix, key_hint=self._mix_key)
+                else:
+                    mix = counts.sum(axis=1) if view is None \
+                        else self.counts.sum(axis=1)
+                    mix[task_type] += 1        # include the arriving task
+                    target = self._target_for(mix)
+                deficit = target[task_type] - counts[task_type]
+                best = np.flatnonzero(deficit == deficit.max())
+                j = int(best[np.argmax(self.mu[task_type][best])])
         else:
             j = int(self.policy.choose(
                 task_type, view if view is not None else self._internal_view(),
                 rng if rng is not None else self._rng))
-        self.counts[task_type, j] += 1
-        self.backlog_work[j] += 1.0 / self.mu[task_type, j]
+        self._counts_rows[task_type][j] += 1
+        self._backlog[j] += self._inv_mu_rows[task_type][j]
         return j
+
+    def route_many(self, task_types) -> np.ndarray:
+        """Route a burst of arrivals through one jit-compiled largest-deficit
+        kernel (fleet-scale dispatch). Requires a pinned type mix — the
+        target is then a single placement and the whole burst scans on
+        device, decision-identical to looping `route` (tie-breaks included:
+        the kernel ranks mu in float64 on the host). Unpinned or stateless
+        policies fall back to the Python loop."""
+        types = np.asarray(task_types, dtype=np.int32)
+        if types.ndim != 1:
+            raise ValueError(f"task_types must be 1-D; got {types.shape}")
+        if (not self.policy.needs_target or self._mix_key is None
+                or types.size == 0):
+            return np.array([self.route(int(t)) for t in types],
+                            dtype=np.int64)
+        target = self._target_for(self._mix, key_hint=self._mix_key)
+        if self._ranks is None:
+            self._ranks = _mu_tiebreak_ranks(self.mu)
+        # pad to the next power of two: naturally varying burst sizes would
+        # otherwise recompile the kernel per distinct length
+        m = types.size
+        cap = max(64, 1 << (m - 1).bit_length())
+        padded = np.zeros(cap, dtype=np.int32)
+        padded[:m] = types
+        valid = np.zeros(cap, dtype=bool)
+        valid[:m] = True
+        counts, js = _route_many_kernel(
+            jnp.asarray(target, dtype=jnp.int32),
+            jnp.asarray(self._ranks), jnp.asarray(self.counts, jnp.int32),
+            jnp.asarray(padded), jnp.asarray(valid))
+        js = np.asarray(js[:m]).astype(np.int64)
+        self._counts_rows = np.asarray(counts).astype(np.int64).tolist()
+        backlog = self.backlog_work
+        # np.add.at applies in arrival order: bit-equal to sequential route().
+        np.add.at(backlog, js, (1.0 / self.mu)[types, js])
+        self._backlog = backlog.tolist()
+        return js
 
     def complete(self, task_type: int, pool: int,
                  service_s: float | None = None) -> None:
         """A task finished on `pool`; with a measured service time, fold the
         observation into the EWMA and re-solve on material rate change."""
-        self.counts[task_type, pool] -= 1
-        self.backlog_work[pool] = max(
-            0.0, self.backlog_work[pool] - 1.0 / self.mu[task_type, pool])
+        self._counts_rows[task_type][pool] -= 1
+        b = self._backlog[pool] - self._inv_mu_rows[task_type][pool]
+        self._backlog[pool] = b if b > 0.0 else 0.0
         if service_s is not None:
             expected = 1.0 / self.base_mu[task_type, pool]
             self.tracker.observe(pool, expected / max(service_s, 1e-12))
@@ -448,21 +591,23 @@ class SchedulerCore:
     # ---------------- stragglers / elastic ----------------
     def _maybe_refresh_rates(self) -> None:
         """Fold observed slowdowns into mu; targets re-solve lazily because
-        the cache key includes mu."""
+        the cache key includes the mu version token."""
         factors = self.tracker.slowdown_factors()
         new_mu = self.base_mu * factors[None, :]
         rel = np.abs(new_mu - self.mu) / np.maximum(self.mu, 1e-12)
         if rel.max() > self._resolve_threshold:
-            self.mu = new_mu
+            self._set_mu(new_mu)
 
     def pool_lost(self, pool: int) -> None:
         """Elastic: a pool died; drop its column and re-solve on next route.
         In-flight tasks on the pool are the caller's to re-enqueue."""
-        self.mu = np.delete(self.mu, pool, axis=1)
+        self._set_mu(np.delete(self.mu, pool, axis=1))
         self.base_mu = np.delete(self.base_mu, pool, axis=1)
-        self.counts = np.delete(self.counts, pool, axis=1)
-        self.backlog_work = np.delete(self.backlog_work, pool)
-        self.l -= 1
+        # rebuild-and-swap keeps the row lists rectangular at every instant
+        # (unlocked snapshot readers must never observe ragged rows)
+        self._counts_rows = [row[:pool] + row[pool + 1:]
+                             for row in self._counts_rows]
+        self._backlog = self._backlog[:pool] + self._backlog[pool + 1:]
         self._targets.clear()
         t = self.tracker
         t.rates = np.delete(t.rates, pool)
@@ -470,13 +615,11 @@ class SchedulerCore:
 
     def pool_added(self, mu_column: np.ndarray) -> None:
         mu_column = np.asarray(mu_column, dtype=np.float64)
-        self.mu = np.concatenate([self.mu, mu_column[:, None]], axis=1)
+        self._set_mu(np.concatenate([self.mu, mu_column[:, None]], axis=1))
         self.base_mu = np.concatenate([self.base_mu, mu_column[:, None]],
                                       axis=1)
-        self.counts = np.concatenate(
-            [self.counts, np.zeros((self.k, 1), np.int64)], axis=1)
-        self.backlog_work = np.append(self.backlog_work, 0.0)
-        self.l += 1
+        self._counts_rows = [row + [0] for row in self._counts_rows]
+        self._backlog = self._backlog + [0.0]
         self._targets.clear()
         t = self.tracker
         t.rates = np.append(t.rates, 0.0)

@@ -66,7 +66,10 @@ class ClusterScheduler:
 
     @property
     def counts(self) -> np.ndarray:
-        return self.core.counts
+        # counts is a snapshot materialized from per-row state: take the
+        # lock so concurrent topology changes can't tear the rows mid-build
+        with self._lock:
+            return self.core.counts
 
     @property
     def tracker(self):

@@ -1,0 +1,281 @@
+"""Batched on-device closed-network simulation (`lax.scan` event core).
+
+One device call simulates a whole fleet of closed networks: the per-event
+logic (next completion, PS/FCFS depletion, largest-deficit routing, task-size
+sampling) is a `lax.scan` step, and `vmap` batches it over seeds, type mixes,
+targets, and affinity matrices — a Figs. 4-12-style sweep runs as a single
+XLA program instead of thousands of Python events per point.
+
+Scope and semantics:
+
+  * Target (deficit-routing) policies only: the placement target N* is solved
+    on the host (or batched via `solve_targets_jax`) and pinned per point;
+    routing on device uses the same strict lexicographic deficit key as
+    `SchedulerCore.route_many`, so given identical event sequences the route
+    decisions match the host rule exactly.
+  * Sizes come from JAX's counter-based RNG, not NumPy's stream: results are
+    statistically equivalent to the host core, not bit-identical (the parity
+    suite pins throughput/energy/Little's-law agreement instead).
+  * float32 state (device-friendly); fine for the paper's metric tolerances.
+  * Fixed closed populations (no piecewise type re-draw): callers with
+    `type_mix` fall back to the host core.
+"""
+from __future__ import annotations
+
+import functools
+from itertools import product
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.affinity import PowerModel, PROPORTIONAL_POWER
+from repro.sched.api import (_mu_tiebreak_ranks, deficit_route_jax,
+                             solve_targets_jax)
+
+_BIG_STAMP = np.int32(2**31 - 1)
+
+
+def _dist_spec(distribution) -> tuple:
+    """Hashable (jit-static) spec capturing the distribution + parameters."""
+    name = distribution.name
+    if name == "bounded_pareto":
+        return (name, float(distribution.alpha), float(distribution.low),
+                float(distribution.high), float(distribution._raw_mean))
+    if name in ("exponential", "uniform", "constant"):
+        return (name,)
+    raise ValueError(f"no on-device sampler for distribution {name!r}")
+
+
+def _size_sampler(spec: tuple):
+    """Per-event task-size draw matching `repro.sim.distributions` (mean 1)."""
+    name = spec[0]
+    if name == "exponential":
+        return lambda key: jax.random.exponential(key, dtype=jnp.float32)
+    if name == "uniform":
+        return lambda key: 2.0 * jax.random.uniform(key, dtype=jnp.float32)
+    if name == "constant":
+        return lambda key: jnp.float32(1.0)
+    a, L, H, raw_mean = spec[1:]
+
+    def sample(key):
+        u = jax.random.uniform(key, dtype=jnp.float32)
+        x = (-(u * H**a - u * L**a - H**a) / (H**a * L**a)) ** (-1.0 / a)
+        return x / raw_mean
+    return sample
+
+
+@functools.partial(jax.jit, static_argnames=("order", "dist_spec",
+                                             "n_steps", "warmup"))
+def _simulate_fleet(mu, P, target, rank, types0, keys, *, order, dist_spec,
+                    n_steps, warmup):
+    """vmapped scan core. All array args carry a leading batch axis B:
+    mu/P/target/rank (B, k, l), types0 (B, n), keys (B, 2)."""
+    sample = _size_sampler(dist_spec)
+
+    def one(mu, P, target, rank, types0, key):
+        k, l = mu.shape
+        n = types0.shape[0]
+        order_ps = order == "PS"
+
+        # ---- initial admissions: sequential largest-deficit routing ----
+        def init_route(counts, t):
+            j = deficit_route_jax(target, rank, counts, t)
+            return counts.at[t, j].add(1), j
+
+        counts0, proc0 = jax.lax.scan(
+            init_route, jnp.zeros((k, l), jnp.int32), types0)
+        key, sub = jax.random.split(key)
+        sizes0 = jax.vmap(sample)(jax.random.split(sub, n))
+        need0 = sizes0 / mu[types0, proc0]
+
+        state = (key, jnp.float32(0.0), proc0, need0, need0,
+                 jnp.zeros(n, jnp.float32), jnp.arange(n, dtype=jnp.int32),
+                 counts0, jnp.float32(0.0), jnp.float32(0.0),
+                 jnp.float32(0.0), jnp.zeros((k, l), jnp.float32))
+
+        def step(state, i):
+            (key, now, proc, remaining, need, entry, stamp, counts,
+             t_start, sum_resp, sum_energy, occ) = state
+            mask = proc[:, None] == jnp.arange(l)[None, :]       # (n, l)
+            cnt = mask.sum(0)
+            cntf = cnt.astype(jnp.float32)
+            if order_ps:
+                rem_col = jnp.where(mask, remaining[:, None], jnp.inf)
+                dtj = jnp.where(cnt > 0, rem_col.min(0) * cntf, jnp.inf)
+            else:
+                stamp_col = jnp.where(mask, stamp[:, None], _BIG_STAMP)
+                head = jnp.argmin(stamp_col, axis=0)             # (l,)
+                dtj = jnp.where(cnt > 0, remaining[head], jnp.inf)
+            j_star = jnp.argmin(dtj)
+            dt = dtj[j_star]
+            now = now + dt
+            if order_ps:
+                remaining = remaining - dt / cntf[proc]
+                pid = jnp.argmin(jnp.where(proc == j_star, remaining, jnp.inf))
+            else:
+                is_head = jnp.arange(n, dtype=jnp.int32) == head[proc]
+                remaining = remaining - jnp.where(is_head, dt, 0.0)
+                pid = head[j_star]
+
+            t = types0[pid]
+            in_win = i >= warmup
+            occ = occ + jnp.where(in_win, dt, 0.0) * counts.astype(jnp.float32)
+            counts = counts.at[t, j_star].add(-1)
+            sum_resp = sum_resp + jnp.where(in_win, now - entry[pid], 0.0)
+            sum_energy = sum_energy + jnp.where(
+                in_win, P[t, j_star] * need[pid], 0.0)
+            t_start = jnp.where(i == warmup - 1, now, t_start)
+
+            # closed system: the program's next task routes immediately
+            j_new = deficit_route_jax(target, rank, counts, t)
+            counts = counts.at[t, j_new].add(1)
+            key, sub = jax.random.split(key)
+            sn = sample(sub) / mu[t, j_new]
+            remaining = remaining.at[pid].set(sn)
+            need = need.at[pid].set(sn)
+            entry = entry.at[pid].set(now)
+            proc = proc.at[pid].set(j_new)
+            stamp = stamp.at[pid].set(n + i)
+            return (key, now, proc, remaining, need, entry, stamp, counts,
+                    t_start, sum_resp, sum_energy, occ), None
+
+        state, _ = jax.lax.scan(step, state,
+                                jnp.arange(n_steps, dtype=jnp.int32))
+        (_, now, _, _, _, _, _, _, t_start, sum_resp, sum_energy, occ) = state
+        measured = jnp.float32(n_steps - warmup)
+        elapsed = now - t_start
+        x = measured / elapsed
+        return (x, sum_resp / measured, sum_energy / measured, elapsed,
+                occ / elapsed)
+
+    return jax.vmap(one)(mu, P, target, rank, types0, keys)
+
+
+def simulate_batch(mu, targets, types0, seeds, *, distribution, order="PS",
+                   n_completions, warmup_completions,
+                   power: PowerModel = PROPORTIONAL_POWER):
+    """Simulate B closed networks in one device call.
+
+    mu: (k, l) shared or (B, k, l) per-point; targets: (B, k, l) pinned
+    placements; types0: (B, n) initial program types; seeds: (B,) ints.
+    Returns a dict of NumPy arrays: throughput/mean_response_time/mean_energy
+    /edp/little_product (B,), elapsed (B,), state_occupancy (B, k, l).
+    """
+    targets = np.asarray(targets)
+    B, k, l = targets.shape
+    mu = np.asarray(mu, dtype=np.float64)
+    mus = np.broadcast_to(mu, (B, k, l)) if mu.ndim == 2 else mu
+    if mus.shape != (B, k, l):
+        raise ValueError(f"mu must be (k, l) or (B, k, l); got {mu.shape}")
+    types0 = np.asarray(types0, dtype=np.int32)
+    if types0.ndim != 2 or types0.shape[0] != B:
+        raise ValueError(f"types0 must be (B, n); got {types0.shape}")
+    if not 0 <= warmup_completions < n_completions:
+        raise ValueError("need 0 <= warmup_completions < n_completions")
+    if mu.ndim == 2:                # shared mu: derive P/ranks once, tile
+        P = np.broadcast_to(power.power_matrix(mu), (B, k, l))
+        ranks = np.broadcast_to(_mu_tiebreak_ranks(mu), (B, k, l))
+    else:
+        P = np.stack([power.power_matrix(m) for m in mus])
+        ranks = np.stack([_mu_tiebreak_ranks(m) for m in mus])
+    keys = np.stack([np.asarray(jax.random.PRNGKey(int(s))) for s in seeds])
+    x, et, ee, elapsed, occ = _simulate_fleet(
+        jnp.asarray(mus, jnp.float32), jnp.asarray(P, jnp.float32),
+        jnp.asarray(targets, jnp.int32), jnp.asarray(ranks), types0,
+        jnp.asarray(keys), order=order, dist_spec=_dist_spec(distribution),
+        n_steps=int(n_completions), warmup=int(warmup_completions))
+    x, et, ee = (np.asarray(v, np.float64) for v in (x, et, ee))
+    occ = np.asarray(occ, np.float64)
+    if warmup_completions == 0:
+        occ = np.zeros_like(occ)    # host convention: warmup==0 tracks none
+    return {"throughput": x, "mean_response_time": et, "mean_energy": ee,
+            "edp": ee * et, "little_product": x * et,
+            "completed": np.full(B, n_completions - warmup_completions),
+            "elapsed": np.asarray(elapsed, np.float64),
+            "state_occupancy": occ}
+
+
+def _types0_for(mix: np.ndarray) -> np.ndarray:
+    return np.repeat(np.arange(len(mix)), mix).astype(np.int32)
+
+
+def simulate_policy_jax(cfg, core) -> "SimMetrics":
+    """Device-engine replacement for `ClosedNetworkSimulator.run` for one
+    target-policy config (fixed populations)."""
+    from repro.sim.simulator import SimMetrics
+    if cfg.type_mix is not None:
+        raise ValueError("piecewise type_mix runs on the host core")
+    mu = np.asarray(cfg.mu, dtype=np.float64)
+    mix = np.asarray(cfg.n_programs_per_type, dtype=np.int64)
+    target = np.asarray(core.policy.solve_target(mu, mix))
+    out = simulate_batch(
+        mu, target[None], _types0_for(mix)[None], [cfg.seed],
+        distribution=cfg.distribution, order=cfg.order,
+        n_completions=cfg.n_completions,
+        warmup_completions=cfg.warmup_completions, power=cfg.power)
+    return SimMetrics(
+        throughput=float(out["throughput"][0]),
+        mean_response_time=float(out["mean_response_time"][0]),
+        mean_energy=float(out["mean_energy"][0]),
+        edp=float(out["edp"][0]),
+        little_product=float(out["little_product"][0]),
+        completed=int(out["completed"][0]),
+        elapsed=float(out["elapsed"][0]),
+        state_occupancy=out["state_occupancy"][0])
+
+
+def sweep_jax(cfg, policy, *, mixes=None, seeds=None, mus=None):
+    """Batched what-if sweep: one device call over the (mu, mix, seed) grid.
+
+    `mixes` (M, k) must all sum to the same N (the closed population is the
+    batch-static program count); `mus` (G, k, l) batches affinity matrices
+    (elastic what-if); `seeds` (S,) replicates. Targets re-solve per
+    (mu, mix) — batched on device when the policy supports it. Returns
+    (grid, results): `grid` is a list of (mu_index, mix, seed) per point and
+    `results` the `simulate_batch` dict over the B = G*M*S points.
+    """
+    from repro.sched.api import get_policy
+    pol = get_policy(policy)
+    if not pol.needs_target:
+        raise ValueError(f"{pol.name} routes on a SystemView; "
+                         "use the host simulator")
+    if cfg.type_mix is not None:
+        raise ValueError("piecewise type_mix runs on the host core")
+    base_mix = np.asarray(cfg.n_programs_per_type, dtype=np.int64)
+    mixes = base_mix[None] if mixes is None else np.asarray(mixes, np.int64)
+    if (mixes.sum(axis=1) != base_mix.sum()).any():
+        raise ValueError("all mixes must keep the closed population "
+                         f"N={base_mix.sum()}")
+    seeds = np.asarray([cfg.seed] if seeds is None else seeds, dtype=np.int64)
+    mus = (np.asarray(cfg.mu, np.float64)[None] if mus is None
+           else np.asarray(mus, np.float64))
+
+    per_mu_targets = []
+    for m in mus:
+        if pol.supports_jax_batch:
+            targets, _ = solve_targets_jax(m, mixes)
+        else:
+            targets = np.stack([np.asarray(pol.solve_target(m, mix))
+                                for mix in mixes])
+        per_mu_targets.append(targets)
+
+    grid, mu_b, tgt_b, types_b, seed_b = [], [], [], [], []
+    for gi, (m, targets) in enumerate(zip(mus, per_mu_targets)):
+        for mix, target in zip(mixes, targets):
+            t0 = _types0_for(mix)
+            for s in seeds:
+                grid.append((gi, mix.copy(), int(s)))
+                mu_b.append(m)
+                tgt_b.append(target)
+                types_b.append(t0)
+                seed_b.append(int(s))
+    results = simulate_batch(
+        # a single shared mu keeps the cheap 2-D path in simulate_batch
+        mus[0] if len(mus) == 1 else np.stack(mu_b),
+        np.stack(tgt_b), np.stack(types_b), seed_b,
+        distribution=cfg.distribution, order=cfg.order,
+        n_completions=cfg.n_completions,
+        warmup_completions=cfg.warmup_completions, power=cfg.power)
+    return grid, results

@@ -13,10 +13,32 @@ Processing orders (both work-conserving, per Lemma 3):
 Energy: a size-s i-type task on processor j occupies the processor for
 s / mu[i, j] dedicated seconds in either order, so task energy is
 P[i, j] * s / mu[i, j] (paper Sec. 5: execution time, NOT response time).
+
+Two inner loops share the model:
+
+  * Fast path (target policies, `policy.needs_target`): O(l) per event.
+    PS runs on per-processor virtual-time clocks (V_j = cumulative
+    per-resident service; a task admitted at V_j with need r completes when
+    V_j reaches V_j + r), so no per-task depletion pass exists; completion
+    queues are per-processor lists sorted descending by (finish, seq) with
+    O(1) pop and binary-search insertion (the O(n_j) element shift is a C
+    memmove, negligible at closed-network populations). FCFS depletes heads
+    only. Occupancy is
+    integrated per cell on change (O(1) per event). Task sizes are
+    prefetched in blocks (stream-identical to per-event draws) whenever the
+    policy path consumes no other randomness. Target policies never read a
+    SystemView, so none is built.
+  * Compat path (stateless policies, i.e. anything routing on a SystemView):
+    the original O(l*N)-per-event loop, kept verbatim because LB's
+    backlog_work must be the same pairwise NumPy sum over residents in
+    admission order to preserve bit-exact routing parity with the
+    pre-refactor goldens.
 """
 from __future__ import annotations
 
 import dataclasses
+from bisect import insort
+from collections import deque
 
 import numpy as np
 
@@ -25,6 +47,7 @@ from repro.sched.api import Policy, SchedulerCore, SystemView, as_core
 from repro.sim.distributions import TaskSizeDistribution
 
 _INF = float("inf")
+_SIZE_BLOCK = 4096      # prefetch granularity for task-size draws
 
 
 @dataclasses.dataclass
@@ -55,7 +78,8 @@ class SimMetrics:
 
 
 class ClosedNetworkSimulator:
-    """Event-driven closed network; O(N) per completion event."""
+    """Event-driven closed network; O(l) per completion for target policies,
+    O(l*N) for SystemView policies."""
 
     def __init__(self, cfg: SimConfig):
         self.cfg = cfg
@@ -66,8 +90,195 @@ class ClosedNetworkSimulator:
     def run(self, policy: str | Policy | SchedulerCore) -> SimMetrics:
         """Simulate under a policy: a registry name ("cab", "grin", "lb",
         ...), a Policy instance, or a prebuilt SchedulerCore (reset here)."""
-        cfg = self.cfg
         core = as_core(policy, self.mu)
+        if core.policy.needs_target:
+            return self._run_fast(core)
+        return self._run_compat(core)
+
+    # ------------------------------------------------------------------
+    # Fast path: target policies — no SystemView, O(l) per event.
+    # ------------------------------------------------------------------
+    def _run_fast(self, core: SchedulerCore) -> SimMetrics:
+        cfg = self.cfg
+        k, l = self.k, self.l
+        mu_rows = self.mu.tolist()
+        P_rows = self.P.tolist()
+        rng = np.random.default_rng(cfg.seed)
+        n_per_type = np.asarray(cfg.n_programs_per_type, dtype=np.int64)
+        n_prog = int(n_per_type.sum())
+        order_ps = cfg.order == "PS"
+
+        task_type = np.repeat(np.arange(self.k), n_per_type)
+        if cfg.type_mix is not None:
+            task_type = rng.choice(self.k, size=n_prog, p=cfg.type_mix)
+            mix_counts = np.bincount(task_type, minlength=self.k)
+            core.reset(self.mu, mix_counts)
+            mix_counts = mix_counts.tolist()    # maintained incrementally
+        else:
+            core.reset(self.mu, n_per_type)
+            mix_counts = None
+        task_type = task_type.tolist()
+
+        # Sizes: with the mix fixed and a target policy, the distribution is
+        # the only consumer of `rng`, so block draws are stream-identical to
+        # per-admission draws (verified for every registry distribution).
+        dist = cfg.distribution
+        if mix_counts is None:
+            size_buf = dist.sample(rng, _SIZE_BLOCK).tolist()
+            size_ptr = 0
+        else:
+            size_buf = None                     # rng.choice interleaves
+            size_ptr = 0
+
+        service_need = [0.0] * n_prog
+        entry_time = [0.0] * n_prog
+        remaining = [0.0] * n_prog              # FCFS only (heads deplete)
+        V = [0.0] * l                           # PS virtual clocks
+        n_res = [0] * l
+        # PS: per-proc completions sorted ASC by (-finish, -seq): the tail is
+        # the earliest finisher with ties broken toward the earliest
+        # admission, exactly the original list-order argmin. FCFS: FIFO.
+        ps_q: list[list] = [[] for _ in range(l)]
+        fifo: list[deque] = [deque() for _ in range(l)]
+        seq = 0
+
+        # O(1)-per-event occupancy: integrate each (type, proc) cell on
+        # change; cnt_rows mirrors core's counts cheaply on the sim side.
+        occ_rows = [[0.0] * l for _ in range(k)]
+        last_t = [[0.0] * l for _ in range(k)]
+        cnt_rows = [[0] * l for _ in range(k)]
+
+        route = core.route
+        now = 0.0
+
+        def admit(pid: int) -> None:
+            nonlocal seq, size_ptr, size_buf
+            t = task_type[pid]
+            j = route(t)
+            if size_buf is None:
+                s = float(dist.sample(rng, 1)[0])
+            else:
+                if size_ptr == _SIZE_BLOCK:
+                    size_buf = dist.sample(rng, _SIZE_BLOCK).tolist()
+                    size_ptr = 0
+                s = size_buf[size_ptr]
+                size_ptr += 1
+            sn = s / mu_rows[t][j]
+            service_need[pid] = sn
+            entry_time[pid] = now
+            if order_ps:
+                insort(ps_q[j], (-(V[j] + sn), -seq, pid))
+            else:
+                remaining[pid] = sn
+                fifo[j].append(pid)
+            seq += 1
+            n_res[j] += 1
+            row = cnt_rows[t]
+            occ_rows[t][j] += row[j] * (now - last_t[t][j])
+            last_t[t][j] = now
+            row[j] += 1
+
+        for pid in range(n_prog):
+            admit(pid)
+
+        completed = 0
+        measured = 0
+        t_measure_start = 0.0
+        sum_resp = 0.0
+        sum_energy = 0.0
+        n_completions = cfg.n_completions
+        warmup = cfg.warmup_completions
+        in_window = warmup <= 0     # == the pre-refactor `completed > warmup`
+        occ_started = False         # warmup <= 0 never starts the occ window
+
+        while completed < n_completions:
+            # ---- find next completion (O(l)) ----
+            best_dt = _INF
+            best_j = -1
+            if order_ps:
+                for j in range(l):
+                    q = ps_q[j]
+                    if q:
+                        dt = (-q[-1][0] - V[j]) * n_res[j]
+                        if dt < best_dt:
+                            best_dt, best_j = dt, j
+            else:
+                for j in range(l):
+                    q = fifo[j]
+                    if q:
+                        dt = remaining[q[0]]
+                        if dt < best_dt:
+                            best_dt, best_j = dt, j
+            assert best_j >= 0, "no runnable tasks — system cannot be empty"
+
+            # ---- advance time & deplete (O(l)) ----
+            now += best_dt
+            j = best_j
+            if order_ps:
+                for jj in range(l):
+                    r = n_res[jj]
+                    if r:
+                        V[jj] += best_dt / r
+                pid = ps_q[j].pop()[2]
+            else:
+                for jj in range(l):
+                    q = fifo[jj]
+                    if q:
+                        remaining[q[0]] -= best_dt
+                pid = fifo[j].popleft()
+            n_res[j] -= 1
+
+            # ---- complete ----
+            t = task_type[pid]
+            core.complete(t, j)
+            row = cnt_rows[t]
+            occ_rows[t][j] += row[j] * (now - last_t[t][j])
+            last_t[t][j] = now
+            row[j] -= 1
+            completed += 1
+
+            if completed == warmup:     # unreachable when warmup <= 0
+                t_measure_start = now
+                in_window = True
+                occ_started = True
+                for i in range(k):
+                    oi, li = occ_rows[i], last_t[i]
+                    for jj in range(l):
+                        oi[jj] = 0.0
+                        li[jj] = now
+            elif in_window:
+                measured += 1
+                sum_resp += now - entry_time[pid]
+                sum_energy += P_rows[t][j] * service_need[pid]
+
+            # ---- the program's next task enters immediately (closed) ----
+            if mix_counts is not None:
+                tt = int(rng.choice(self.k, p=cfg.type_mix))
+                if tt != t:
+                    mix_counts[t] -= 1
+                    mix_counts[tt] += 1
+                    core.notify_type_counts(mix_counts)
+                    task_type[pid] = tt
+            admit(pid)
+
+        occupancy = np.asarray(occ_rows)
+        if occ_started:
+            for i in range(k):
+                for jj in range(l):
+                    occupancy[i, jj] += cnt_rows[i][jj] * (now - last_t[i][jj])
+        else:
+            occupancy[:] = 0.0      # pre-refactor quirk: warmup==0 tracks none
+        return self._metrics(measured, now - t_measure_start, sum_resp,
+                             sum_energy, occupancy)
+
+    # ------------------------------------------------------------------
+    # Compat path: SystemView policies (LB/JSQ/RD/BF and custom choosers).
+    # Kept op-for-op equal to the pre-refactor loop: LB routes on pairwise
+    # NumPy sums of true remaining sizes in admission order, so any change
+    # to summation order or tie-breaks would shift its decisions.
+    # ------------------------------------------------------------------
+    def _run_compat(self, core: SchedulerCore) -> SimMetrics:
+        cfg = self.cfg
         rng = np.random.default_rng(cfg.seed)
         n_per_type = np.asarray(cfg.n_programs_per_type, dtype=np.int64)
         n_prog = int(n_per_type.sum())
@@ -84,9 +295,11 @@ class ClosedNetworkSimulator:
 
         proc_tasks: list[list[int]] = [[] for _ in range(self.l)]  # FCFS order
 
-        core.reset(self.mu, n_per_type if cfg.type_mix is None
-                   else np.bincount(task_type, minlength=self.k))
-        counts = core.counts                # maintained by route/complete
+        mix0 = (n_per_type if cfg.type_mix is None
+                else np.bincount(task_type, minlength=self.k))
+        core.reset(self.mu, mix0)
+        mix_counts = mix0.tolist()          # maintained incrementally
+        counts = np.zeros((self.k, self.l), dtype=np.int64)  # sim-side mirror
 
         def view() -> SystemView:
             backlog_work = np.zeros(self.l)
@@ -101,7 +314,8 @@ class ClosedNetworkSimulator:
 
         def admit(pid: int, now: float) -> None:
             t = int(task_type[pid])
-            j = core.route(t, view=view(), rng=rng)   # updates counts
+            j = core.route(t, view=view(), rng=rng)
+            counts[t, j] += 1
             s = float(cfg.distribution.sample(rng, 1)[0])
             task_proc[pid] = j
             service_need[pid] = s / self.mu[t, j]
@@ -175,6 +389,7 @@ class ClosedNetworkSimulator:
             t = int(task_type[pid])
             proc_tasks[j].remove(pid)
             core.complete(t, j)
+            counts[t, j] -= 1
             completed += 1
 
             in_window = completed > cfg.warmup_completions
@@ -189,12 +404,19 @@ class ClosedNetworkSimulator:
 
             # ---- the program's next task enters immediately (closed) ----
             if cfg.type_mix is not None:
-                task_type[pid] = rng.choice(self.k, p=cfg.type_mix)
-                core.notify_type_counts(
-                    np.bincount(task_type, minlength=self.k))
+                tt = int(rng.choice(self.k, p=cfg.type_mix))
+                if tt != t:
+                    mix_counts[t] -= 1
+                    mix_counts[tt] += 1
+                    core.notify_type_counts(mix_counts)
+                    task_type[pid] = tt
             admit(pid, now)
 
-        elapsed = now - t_measure_start
+        return self._metrics(measured, now - t_measure_start, sum_resp,
+                             sum_energy, occupancy)
+
+    def _metrics(self, measured: int, elapsed: float, sum_resp: float,
+                 sum_energy: float, occupancy: np.ndarray) -> SimMetrics:
         x = measured / elapsed if elapsed > 0 else 0.0
         et = sum_resp / measured if measured else _INF
         ee = sum_energy / measured if measured else _INF
@@ -205,18 +427,37 @@ class ClosedNetworkSimulator:
                           state_occupancy=occ)
 
 
-def run_policy_sweep(cfg: SimConfig, policies) -> dict[str, SimMetrics]:
-    """Run the same workload under each policy (same seed => same sizes).
+def run_policy_sweep(cfg: SimConfig, policies,
+                     engine: str = "host") -> dict[str, SimMetrics]:
+    """Run the same workload under each policy; results keyed by display name.
 
     `policies` is an iterable of registry names, Policy instances, or
-    SchedulerCores; results are keyed by display name ("CAB", "GrIn", ...).
+    SchedulerCores. `engine` selects the simulator:
+
+      * "host" (default) — the event-driven host core; one NumPy stream per
+        run (same seed => same task sizes), bit-reproducible across versions.
+      * "jax"  — target policies run on the batched `lax.scan` device engine
+        (its own JAX random stream: statistically equivalent, not
+        bit-identical to host runs); SystemView policies and piecewise
+        type-mix workloads fall back to the host core.
+      * "auto" — alias for "jax" with its fallbacks.
     """
+    if engine not in ("host", "jax", "auto"):
+        raise ValueError(f"unknown engine {engine!r}: host | jax | auto")
     sim = ClosedNetworkSimulator(cfg)
+    # the device engine needs a real measurement window; degenerate warmups
+    # (legal on the host: zero measured completions) fall back too
+    jax_ok = (engine in ("jax", "auto") and cfg.type_mix is None
+              and 0 <= cfg.warmup_completions < cfg.n_completions)
     out: dict[str, SimMetrics] = {}
     for c in (as_core(p, cfg.mu) for p in policies):
         key, n = c.name, 2
         while key in out:                       # e.g. two 'Opt' variants
             key = f"{c.name}#{n}"
             n += 1
-        out[key] = sim.run(c)
+        if jax_ok and c.policy.needs_target:
+            from repro.sim.engine_jax import simulate_policy_jax
+            out[key] = simulate_policy_jax(cfg, c)
+        else:
+            out[key] = sim.run(c)
     return out

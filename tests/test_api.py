@@ -267,6 +267,37 @@ def test_warm_targets_prefills_cache():
     assert core2.resolves == 3
 
 
+def test_target_cache_evicts_fifo_not_wholesale(monkeypatch):
+    """Regression: hitting _CACHE_CAP used to clear the WHOLE cache, so
+    warming cap+1 mixes wiped every earlier target and each re-visit
+    re-solved from scratch. FIFO eviction must keep the recent entries."""
+    from repro.sched import api
+    monkeypatch.setattr(api, "_CACHE_CAP", 4)
+    mu3 = _mu3(4)
+    core = SchedulerCore("grin", mu3)
+    mixes = [[6, 7, 5], [3, 3, 3], [1, 8, 2], [10, 1, 1], [2, 2, 14]]
+    assert core.warm_targets(mixes) == 5      # 5 inserts, cap 4
+    assert len(core._targets) == 4
+    r0 = core.resolves
+    # the 4 most recent survive: no re-solve on any of them
+    for mix in mixes[1:]:
+        core.notify_type_counts(mix)
+        core.route(0)
+        core.complete(0, core.counts[0].argmax())
+    assert core.resolves == r0
+    # the evicted oldest re-solves exactly once
+    core.notify_type_counts(mixes[0])
+    core.route(0)
+    assert core.resolves == r0 + 1
+    # same via the lazy host path: repeated alternation stays cached
+    core3 = SchedulerCore("grin+", mu3)
+    core3.warm_targets(mixes)                 # host loop, cap 4, FIFO
+    assert len(core3._targets) == 4
+    r1 = core3.resolves
+    core3.warm_targets(mixes[1:])             # all still resident
+    assert core3.resolves == r1
+
+
 # ------------------------------------------------------------ solver backends
 
 def test_slsqp_policy_yields_feasible_integer_target():

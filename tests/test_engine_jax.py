@@ -1,0 +1,136 @@
+"""Parity suite: the batched JAX engine vs the host simulator, and the
+jitted route_many kernel vs sequential SchedulerCore.route.
+
+Routing parity is bit-exact (same deficit rule, same tie-breaks, host-ranked
+mu). Metric parity is statistical: the device engine uses JAX's counter-based
+RNG, so throughput/energy agree within sampling tolerance, while the
+structural identities (Little's law, proportional-power energy == 1) must
+hold on both engines.
+"""
+import numpy as np
+import pytest
+
+from repro.sched import SchedulerCore, get_policy
+from repro.sim import (ClosedNetworkSimulator, SimConfig, make_distribution,
+                       run_policy_sweep, simulate_batch, simulate_policy_jax,
+                       sweep_jax)
+
+MU3 = np.random.default_rng(4).uniform(1, 30, size=(3, 3))
+NT3 = np.array([10, 10, 10])
+
+
+def _cfg(**kw):
+    base = dict(mu=MU3, n_programs_per_type=NT3,
+                distribution=make_distribution("exponential"), order="PS",
+                n_completions=4000, warmup_completions=800, seed=0)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+# --------------------------------------------------- route kernel parity
+
+def test_route_many_matches_sequential_route_bit_exactly():
+    rng = np.random.default_rng(7)
+    mu = rng.uniform(1, 30, size=(3, 4))
+    mix = np.array([8, 9, 7])
+    types = rng.integers(0, 3, size=300)
+    loop = SchedulerCore("grin", mu).reset(mu, mix)
+    many = SchedulerCore("grin", mu).reset(mu, mix)
+    js_loop = np.array([loop.route(int(t)) for t in types])
+    js_many = many.route_many(types)
+    np.testing.assert_array_equal(js_loop, js_many)
+    np.testing.assert_array_equal(loop.counts, many.counts)
+    np.testing.assert_array_equal(loop.backlog_work, many.backlog_work)
+
+
+def test_route_many_tie_breaks_match_on_duplicate_rates():
+    """Equal-mu pools exercise the rank tie-break (lowest index wins)."""
+    mu = np.array([[5.0, 5.0, 2.0], [1.0, 4.0, 4.0]])
+    mix = np.array([6, 6])
+    types = np.array([0, 1] * 40)
+    loop = SchedulerCore("grin", mu).reset(mu, mix)
+    many = SchedulerCore("grin", mu).reset(mu, mix)
+    np.testing.assert_array_equal(
+        np.array([loop.route(int(t)) for t in types]),
+        many.route_many(types))
+
+
+def test_route_many_unpinned_falls_back_to_loop():
+    core = SchedulerCore("grin", MU3)          # no pinned mix
+    js = core.route_many(np.array([0, 1, 2, 0]))
+    assert js.shape == (4,) and core.counts.sum() == 4
+    with pytest.raises(ValueError, match="1-D"):
+        core.route_many(np.zeros((2, 2), dtype=np.int64))
+
+
+def test_route_many_stateless_policy_falls_back():
+    core = SchedulerCore("jsq", MU3)
+    js = core.route_many(np.array([0, 1, 2]))
+    assert js.shape == (3,) and core.counts.sum() == 3
+
+
+# --------------------------------------------------- engine metric parity
+
+@pytest.mark.parametrize("order", ["PS", "FCFS"])
+@pytest.mark.parametrize("dist", ["exponential", "uniform"])
+def test_engine_matches_host_metrics(order, dist):
+    cfg = _cfg(order=order, distribution=make_distribution(dist))
+    host = ClosedNetworkSimulator(cfg).run("grin")
+    dev = simulate_policy_jax(cfg, SchedulerCore("grin", cfg.mu))
+    assert dev.throughput == pytest.approx(host.throughput, rel=0.06)
+    assert dev.mean_energy == pytest.approx(host.mean_energy, rel=0.06)
+    assert dev.mean_response_time == pytest.approx(
+        host.mean_response_time, rel=0.08)
+    # structural identities hold on-device
+    assert dev.little_product == pytest.approx(NT3.sum(), rel=0.03)
+    assert dev.mean_energy == pytest.approx(1.0, rel=0.06)   # eq. 23
+
+
+def test_engine_occupancy_tracks_host():
+    cfg = _cfg(n_completions=6000, warmup_completions=1200)
+    host = ClosedNetworkSimulator(cfg).run("grin")
+    dev = simulate_policy_jax(cfg, SchedulerCore("grin", cfg.mu))
+    assert dev.state_occupancy.shape == host.state_occupancy.shape
+    assert np.abs(dev.state_occupancy - host.state_occupancy).max() < 1.5
+    assert dev.state_occupancy.sum() == pytest.approx(NT3.sum(), rel=0.02)
+
+
+def test_sweep_jax_grid_and_batching():
+    cfg = _cfg(n_completions=2000, warmup_completions=400)
+    mixes = np.array([[10, 10, 10], [5, 15, 10], [20, 5, 5]])
+    grid, res = sweep_jax(cfg, "grin", mixes=mixes, seeds=[0, 1])
+    assert len(grid) == 6 and res["throughput"].shape == (6,)
+    assert np.all(res["throughput"] > 0)
+    assert res["little_product"] == pytest.approx(
+        np.full(6, 30.0), rel=0.05)
+    # population-changing mixes are rejected (closed system)
+    with pytest.raises(ValueError, match="closed population"):
+        sweep_jax(cfg, "grin", mixes=np.array([[1, 1, 1]]))
+    with pytest.raises(ValueError, match="SystemView"):
+        sweep_jax(cfg, "lb")
+
+
+def test_simulate_batch_validates_shapes():
+    cfg = _cfg()
+    tgt = np.asarray(get_policy("grin").solve_target(MU3, NT3))
+    with pytest.raises(ValueError, match="types0"):
+        simulate_batch(MU3, tgt[None], np.zeros(30, np.int32), [0],
+                       distribution=cfg.distribution,
+                       n_completions=100, warmup_completions=10)
+    with pytest.raises(ValueError, match="warmup"):
+        simulate_batch(MU3, tgt[None], np.zeros((1, 30), np.int32), [0],
+                       distribution=cfg.distribution,
+                       n_completions=100, warmup_completions=100)
+
+
+def test_run_policy_sweep_jax_engine_falls_back_for_stateless():
+    cfg = _cfg(n_completions=1500, warmup_completions=300)
+    out = run_policy_sweep(cfg, ["grin", "jsq"], engine="jax")
+    host = run_policy_sweep(cfg, ["grin", "jsq"], engine="host")
+    # jsq fell back to the host core: identical stream, identical result
+    assert out["JSQ"].throughput == host["JSQ"].throughput
+    # grin ran on-device: statistically equivalent, not bit-equal
+    assert out["GrIn"].throughput == pytest.approx(
+        host["GrIn"].throughput, rel=0.06)
+    with pytest.raises(ValueError, match="unknown engine"):
+        run_policy_sweep(cfg, ["grin"], engine="warp")
