@@ -8,13 +8,16 @@ from repro.core.affinity import (AffinityCase, PowerModel, CONSTANT_POWER,
 from repro.core.cab import CABSolution, cab_closed_form_x, cab_solve, cab_target_state
 from repro.core.energy import edp, expected_delay, expected_energy_per_task
 from repro.core.exhaustive import exhaustive_count, exhaustive_solve
-from repro.core.grin import GrInResult, grin_init, grin_solve, grin_solve_jax
+from repro.core.grin import (GrInBlockResult, GrInResult, grin_block_solve,
+                             grin_init, grin_solve, grin_solve_batch_jax,
+                             grin_solve_jax)
 from repro.core.grin_plus import (grin_multistart_solve, grin_plus_solve,
                                   grin_solve_from)
 from repro.core.slsqp import (SLSQPResult, round_largest_remainder,
                               slsqp_solve)
 from repro.core.throughput import (column_throughputs, delta_x_add,
-                                   delta_x_remove, state_from_pair,
+                                   delta_x_add_block, delta_x_remove,
+                                   delta_x_remove_block, state_from_pair,
                                    system_throughput, system_throughput_jax,
                                    throughput_2x2, throughput_map_2x2)
 

@@ -18,12 +18,26 @@ GrIn accepts a move only when dX > 0, hence X_sys strictly increases per move
 (Lemma 8) and the algorithm terminates at a local maximum. Per-sweep cost is
 O(k*l) using the top-2 trick to resolve the src != dst constraint.
 
-Two implementations: NumPy (host scheduler) and pure-JAX (jit/vmap-able, used
-for vectorized policy sweeps and on-device re-solves).
+Block moves: relocating m same-type tasks between two disjoint columns also
+has an exact closed-form delta (`delta_x_add_block`/`delta_x_remove_block`),
+so a whole doubling ladder of block sizes can be scored in one vectorized
+pass. Each step picks the steepest SINGLE move's direction (the same choice
+plain GrIn makes) and then the gain-maximizing ladder size along it —
+collapsing O(N) single moves into O(log N)-ish block moves while preserving
+Lemma 8 monotonicity (every accepted block strictly increases X_sys).
+Convergence is declared on the m=1 signal, so the block solver's fixed
+points are exactly the single-move local maxima.
+
+Three implementations: NumPy single-move (host scheduler), NumPy block-move
+(reference mirror of the device solver, with a per-move X_sys history), and
+pure-JAX (jit/vmap-able): `grin_solve_jax` (single-move steepest ascent) and
+`grin_solve_batch_jax` (block-move, batched over (mu, mix) instances — the
+production path for on-device target grids).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
@@ -31,9 +45,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.throughput import (column_throughputs, delta_x_add,
-                                   delta_x_remove, system_throughput)
+                                   delta_x_add_block, delta_x_remove,
+                                   delta_x_remove_block, system_throughput,
+                                   system_throughput_jax)
 
 _TOL = 1e-12
+# float32 solvers: accept only gains clearly above accumulated rounding
+# noise (relative to X_sys), else noise-level "improvements" can 2-cycle
+# forever. ~64 ULP at float32. The block solver converges at a finer
+# threshold: as the production path it polishes through the gain band the
+# single-move baseline stops in (still ~16 ULP above observed noise; a
+# noise cycle would only burn iterations until the move cap and report
+# converged=False, never corrupt the placement).
+_TOL32 = 4e-6
+_TOL32_BLOCK = 1e-6
 
 
 def grin_init(mu: np.ndarray, n_tasks: np.ndarray) -> np.ndarray:
@@ -125,6 +150,90 @@ def grin_solve(mu: np.ndarray, n_tasks: np.ndarray,
                       sweeps=sweeps)
 
 
+_LADDER_CAP = 24        # 2^23 tasks: far above any closed population here
+
+
+def _ladder(total: int) -> list[int]:
+    """Doubling ladder of block sizes covering populations up to `total`,
+    LARGEST FIRST so first-occurrence argmax ties prefer the biggest block."""
+    n_sizes = max(1, min(_LADDER_CAP, int(np.ceil(np.log2(max(total, 2))))
+                         + 1))
+    return [1 << i for i in range(n_sizes - 1, -1, -1)]
+
+
+@dataclasses.dataclass
+class GrInBlockResult:
+    N: np.ndarray
+    x_sys: float
+    moves: int
+    converged: bool
+    history: list       # X_sys after each accepted block move (monotone)
+
+
+def grin_block_solve(mu: np.ndarray, n_tasks: np.ndarray,
+                     max_moves: int = 100_000) -> GrInBlockResult:
+    """Host block-move GrIn, mirroring the device solver's selection rule:
+    the move DIRECTION (p, src, dst) is the steepest single move (identical
+    to plain GrIn's choice, so the trajectory is a conservative acceleration
+    of the single-move one) and the block SIZE is the largest doubling-
+    ladder entry whose prefix of doubling slopes (average marginal gain per
+    size-doubling) stays >= max(second-best single-move gain, 0) — the
+    run-length guard that stops a block from overshooting past the point
+    where the single-move path would have switched direction.
+
+    Terminates when no single move improves — the same fixed-point class as
+    Algorithm 2 — and records X_sys after every accepted block move, pinning
+    the Lemma-8 monotonicity property in tests.
+    """
+    mu = np.asarray(mu, dtype=np.float64)
+    n_tasks = np.asarray(n_tasks, dtype=np.int64)
+    k, l = mu.shape
+    N = grin_init(mu, n_tasks)
+    sizes = _ladder(int(n_tasks.sum()))[::-1]     # ascending: 1, 2, 4, ...
+    history: list[float] = []
+    moves = 0
+    converged = False
+    while moves < max_moves:
+        best = (-np.inf, -1, -1, -1)              # m=1 gain, p, src, dst
+        runner = -np.inf
+        for p in range(k):
+            if not (N[p] >= 1).any():
+                continue
+            dplus = delta_x_add_block(N, mu, p, 1)
+            dminus = np.where(N[p] >= 1, delta_x_remove_block(N, mu, p, 1),
+                              -np.inf)
+            gain = dminus[:, None] + dplus[None, :]
+            np.fill_diagonal(gain, -np.inf)
+            flat = np.sort(gain, axis=None)
+            if flat[-1] > best[0]:
+                runner = max(runner, best[0], flat[-2])
+                idx = int(np.argmax(gain))
+                best = (flat[-1], p, idx // l, idx % l)
+            else:
+                runner = max(runner, flat[-1])
+        gain, p, src, dst = best
+        if gain <= _TOL:
+            converged = True
+            break
+        thresh = max(runner, 0.0)
+        m_best, g_best, g_prev, m_prev = 1, gain, gain, 1
+        for m in sizes[1:]:                       # ascending from 2
+            if N[p, src] < m:
+                break
+            g_m = (delta_x_remove_block(N, mu, p, m)[src]
+                   + delta_x_add_block(N, mu, p, m)[dst])
+            if (g_m - g_prev) / (m - m_prev) < thresh:
+                break
+            m_best, g_best = m, g_m
+            g_prev, m_prev = g_m, m
+        N[p, src] -= m_best
+        N[p, dst] += m_best
+        moves += 1
+        history.append(system_throughput(N, mu))
+    return GrInBlockResult(N=N, x_sys=system_throughput(N, mu), moves=moves,
+                           converged=converged, history=history)
+
+
 # ---------------------------------------------------------------------------
 # Pure-JAX GrIn: steepest-ascent variant inside lax.while_loop. Used where the
 # solver must live inside a jitted pipeline (vectorized policy sweeps, elastic
@@ -144,13 +253,9 @@ def _deltas_jax(N: jnp.ndarray, mu: jnp.ndarray):
     return dplus, dminus
 
 
-def grin_solve_jax(mu: jnp.ndarray, n_tasks: jnp.ndarray,
-                   max_moves: int = 4096) -> jnp.ndarray:
-    """jit/vmap-able GrIn; returns the (k, l) placement as float32."""
-    mu = jnp.asarray(mu, dtype=jnp.float32)
+def _grin_init_jax(mu: jnp.ndarray, n_tasks: jnp.ndarray) -> jnp.ndarray:
+    """Algorithm 1 init (vectorized): (k, l) float32 placement."""
     k, l = mu.shape
-
-    # ---- Algorithm 1 init (vectorized) ----
     top_row = jnp.argmax(mu, axis=0)                         # (l,)
     claims = (top_row[None, :] == jnp.arange(k)[:, None])    # (k, l) bool
     n_claimed = claims.sum(axis=1)                           # (l,) -> per row
@@ -167,12 +272,27 @@ def grin_solve_jax(mu: jnp.ndarray, n_tasks: jnp.ndarray,
     rank_of_col = jnp.argsort(order, axis=1).astype(jnp.float32)
     seed = (eff & (rank_of_col < nt[:, None])).astype(jnp.float32)
     rem = nt - seed.sum(axis=1)
-    N0 = seed + jax.nn.one_hot(slowest, l) * rem[:, None]
+    return seed + jax.nn.one_hot(slowest, l) * rem[:, None]
 
-    def x_sys(N):
-        colsum = N.sum(axis=0)
-        return jnp.where(colsum > 0, (mu * N).sum(0) / jnp.maximum(colsum, 1),
-                         0.0).sum()
+
+def grin_solve_jax(mu: jnp.ndarray, n_tasks: jnp.ndarray,
+                   max_moves: int | None = None, return_info: bool = False):
+    """jit/vmap-able single-move GrIn; returns the (k, l) placement (float32).
+
+    `max_moves=None` (default) scales the move cap with the population
+    (4 * sum(n_tasks) + 64) — the PR 2 fixed cap of 4096 silently returned
+    unconverged placements for larger mixes; an explicit int is a HARD cap
+    for callers that need bounded work (same contract as
+    `grin_solve_batch_jax`). With `return_info=True` (a trace-time static
+    flag) returns (N, converged, moves) so callers can detect the cap being
+    hit either way.
+    """
+    mu = jnp.asarray(mu, dtype=jnp.float32)
+    k, l = mu.shape
+    N0 = _grin_init_jax(mu, n_tasks)
+    total = jnp.asarray(n_tasks, dtype=jnp.float32).sum()
+    cap = (jnp.int32(max_moves) if max_moves is not None
+           else 4 * total.astype(jnp.int32) + 64)
 
     def body(state):
         N, _, moves = state
@@ -184,7 +304,7 @@ def grin_solve_jax(mu: jnp.ndarray, n_tasks: jnp.ndarray,
         flat = jnp.argmax(gain)
         p, s, d = jnp.unravel_index(flat, (k, l, l))
         g = gain[p, s, d]
-        do = g > _TOL
+        do = g > _TOL32 * (1.0 + system_throughput_jax(N, mu))
         upd = (jax.nn.one_hot(p, k)[:, None]
                * (jax.nn.one_hot(d, l) - jax.nn.one_hot(s, l))[None, :])
         N = jnp.where(do, N + upd, N)
@@ -192,13 +312,96 @@ def grin_solve_jax(mu: jnp.ndarray, n_tasks: jnp.ndarray,
 
     def cond(state):
         _, improved, moves = state
-        return improved & (moves < max_moves)
+        return improved & (moves < cap)
 
-    N, _, _ = jax.lax.while_loop(cond, body, (N0, jnp.array(True), jnp.array(0)))
+    N, improved, moves = jax.lax.while_loop(
+        cond, body, (N0, jnp.array(True), jnp.array(0, jnp.int32)))
+    if return_info:
+        return N, ~improved, moves
     return N
 
 
 def grin_x_sys_jax(mu: jnp.ndarray, n_tasks: jnp.ndarray) -> jnp.ndarray:
-    N = grin_solve_jax(mu, n_tasks)
-    colsum = N.sum(axis=0)
-    return jnp.where(colsum > 0, (mu * N).sum(0) / jnp.maximum(colsum, 1), 0.0).sum()
+    return system_throughput_jax(grin_solve_jax(mu, n_tasks), mu)
+
+
+# ---------------------------------------------------------------------------
+# Batched block-move GrIn: the device production path. One lax.while_loop
+# advances a whole (mu, mix) batch; each iteration scores EVERY (block size,
+# type, src, dst) move for every instance in one vectorized pass (Pallas
+# kernel on TPU, jnp reference elsewhere — bit-identical) and applies the
+# selected block (steepest-single-move direction, best ladder size along it)
+# per instance. Converged instances carry a per-instance mask so they stop
+# mutating (and stop counting moves) while the rest of the batch drains; the
+# loop exits as soon as all are done.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_sizes", "max_moves",
+                                             "use_kernel"))
+def _grin_block_core(mus, mixes, n_sizes, max_moves, use_kernel):
+    from repro.kernels.grin_moves import block_move_scores
+    B, k, l = mus.shape
+    # Largest size first: argmax ties prefer the biggest improving block.
+    sizes = jnp.float32(2) ** jnp.arange(n_sizes - 1, -1, -1)
+    N0 = jax.vmap(_grin_init_jax)(mus, mixes)
+    cap = (jnp.int32(max_moves) if max_moves is not None
+           else mixes.sum(axis=1).max().astype(jnp.int32) + 64)
+
+    def body(state):
+        N, active, moves, it = state
+        _, bi, bg, base = block_move_scores(N, mus, sizes,
+                                            use_kernel=use_kernel,
+                                            return_gains=False)
+        mi, p, s, d = jnp.unravel_index(bi, (n_sizes, k, l, l))
+        m = sizes[mi]                                        # (B,)
+        # Convergence is the m=1 signal: exhausted => single-move local max.
+        x = jax.vmap(system_throughput_jax)(N, mus)
+        do = active & (base > _TOL32_BLOCK * (1.0 + x))
+        upd = (m[:, None, None]
+               * jax.nn.one_hot(p, k)[:, :, None]
+               * (jax.nn.one_hot(d, l) - jax.nn.one_hot(s, l))[:, None, :])
+        N = jnp.where(do[:, None, None], N + upd, N)
+        return N, do, moves + do.astype(jnp.int32), it + 1
+
+    def cond(state):
+        _, active, _, it = state
+        return jnp.any(active) & (it < cap)
+
+    N, active, moves, _ = jax.lax.while_loop(
+        cond, body, (N0, jnp.ones(B, bool), jnp.zeros(B, jnp.int32),
+                     jnp.int32(0)))
+    xs = jax.vmap(system_throughput_jax)(N, mus)
+    return N, xs, ~active, moves
+
+
+def grin_solve_batch_jax(mu, n_tasks_batch, *, n_sizes: int | None = None,
+                         max_moves: int | None = None,
+                         use_kernel: bool | None = None):
+    """Block-move GrIn over a batch of instances, in one device call.
+
+    mu: (k, l) shared or (B, k, l) per-instance affinities; n_tasks_batch:
+    (B, k) type mixes. Returns (N (B, k, l) float32, x_sys (B,), converged
+    (B,) bool, moves (B,) int32). `n_sizes` (the doubling-ladder length) must
+    be trace-time static; when omitted it is derived from the concrete mixes.
+    `max_moves=None` caps the loop at the batch's max population + 64 — block
+    convergence needs O(log N)-ish moves, so hitting the cap (converged
+    False) signals a degenerate instance rather than a small budget.
+    `use_kernel` picks the Pallas scoring kernel (None: TPU/interpret auto).
+    """
+    mixes = jnp.asarray(n_tasks_batch, dtype=jnp.float32)
+    mus = jnp.asarray(mu, dtype=jnp.float32)
+    if mixes.ndim != 2:
+        raise ValueError(f"n_tasks_batch must be (B, k); got {mixes.shape}")
+    B, k = mixes.shape
+    if mus.ndim == 2:
+        mus = jnp.broadcast_to(mus, (B,) + mus.shape)
+    if mus.ndim != 3 or mus.shape[:2] != (B, k):
+        raise ValueError(f"mu must be (k={k}, l) or (B={B}, k={k}, l); got "
+                         f"{tuple(jnp.shape(mu))}")
+    if n_sizes is None:
+        n_sizes = len(_ladder(int(np.asarray(n_tasks_batch).sum(axis=1).max())))
+    if use_kernel is None:
+        from repro.kernels.grin_moves import _interpret, _use_pallas
+        use_kernel = _use_pallas() or _interpret()
+    return _grin_block_core(mus, mixes, int(n_sizes), max_moves,
+                            bool(use_kernel))

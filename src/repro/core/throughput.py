@@ -122,3 +122,42 @@ def delta_x_remove(N: np.ndarray, mu: np.ndarray, p: int) -> np.ndarray:
         else:
             out[j] = (X[j] - mu[p, j]) / (col[j] - 1.0)
     return out
+
+
+def delta_x_add_block(N: np.ndarray, mu: np.ndarray, p: int,
+                      m: int) -> np.ndarray:
+    """Exact gain from ADDING m p-type tasks to each column at once.
+
+    Closed form: (w_j + m*mu_pj)/(c_j + m) - X_j simplifies to
+
+        m * (mu[p, j] - X_j) / (c_j + m)
+
+    which reduces to eq. 33-34 at m=1 and covers the empty column
+    (X_j = 0, delta = mu_pj) with no special case.
+    """
+    X = column_throughputs(N, mu)
+    col = np.asarray(N, dtype=np.float64).sum(axis=0)
+    return m * (np.asarray(mu, dtype=np.float64)[p] - X) / (col + m)
+
+
+def delta_x_remove_block(N: np.ndarray, mu: np.ndarray, p: int,
+                         m: int) -> np.ndarray:
+    """Exact change from REMOVING m p-type tasks from each column at once.
+
+    Closed form: m * (X_j - mu[p, j]) / (c_j - m) for c_j > m (reduces to
+    eq. 35-36 at m=1); a fully drained column (c_j == m) loses its whole
+    rate X_j; +inf where fewer than m p-tasks reside (N[p, j] < m).
+    """
+    N = np.asarray(N, dtype=np.float64)
+    mu = np.asarray(mu, dtype=np.float64)
+    X = column_throughputs(N, mu)
+    col = N.sum(axis=0)
+    out = np.full(N.shape[1], np.inf)
+    for j in range(N.shape[1]):
+        if N[p, j] < m:
+            continue
+        if col[j] <= m:
+            out[j] = -X[j]      # column becomes empty; its whole rate is lost
+        else:
+            out[j] = m * (X[j] - mu[p, j]) / (col[j] - m)
+    return out

@@ -1,0 +1,226 @@
+"""Batched GrIn block-move gain scoring + argmax (the solver's inner step).
+
+For a batch of placements N (B, k, l) under affinities mu (B, k, l) and a
+ladder of block sizes `sizes` (M,), the exact system-throughput change from
+moving sizes[m] p-type tasks from column s to a disjoint column d is
+
+    gain[b, m, p, s, d] = R[b, m, p, s] + A[b, m, p, d]
+
+with (closed forms; see `repro.core.throughput.delta_x_{add,remove}_block`)
+
+    A[.., j] = m * (mu[p, j] - X_j) / (c_j + m)
+    R[.., j] = m * (X_j - mu[p, j]) / (c_j - m)    (c_j > m)
+             = -X_j                                (c_j == m, column drains)
+             = -inf                                (N[p, j] < m, infeasible)
+
+plus -inf on the s == d diagonal. Move selection is two chained argmaxes per
+instance: the DIRECTION (p, s, d) is the steepest m=1 move — identical to
+single-move GrIn's choice, which keeps the block solver's trajectory a
+conservative acceleration of the single-move one — and the block SIZE is the
+gain-maximizing ladder entry along that direction (sizes are passed largest
+first, so ties prefer the biggest block). The m=1 best gain doubles as the
+convergence signal: when it is exhausted the state is a single-move local
+maximum, exactly the fixed-point class Lemma 8 terminates in.
+
+Three entry points:
+
+  * `block_move_gains_ref`  — pure-jnp gain scoring (also the CPU production
+    path inside the jitted solver loop).
+  * `block_move_gains_pallas` — Pallas kernel tiled over the batch dimension
+    (grid over B-tiles; each step scores one (Bt, k, l) slab in VMEM and
+    runs the selection in-kernel). The kernel body is op-for-op the
+    reference, so outputs are bit-identical.
+  * `block_move_scores` — dispatching wrapper returning
+    (gains (B, F), best_idx (B,), best_gain (B,), base_gain (B,)) with
+    F = M*k*l*l, best_idx/best_gain the selected move, and base_gain the
+    steepest m=1 gain (the convergence signal).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax >= 0.5 renamed TPUCompilerParams to CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+_NEG = -jnp.inf
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+def _gains_body(N, mu, sizes):
+    """Shared math: N, mu (B, k, l) float32; sizes (M,) float32 -> gain
+    (B, M, k, l, l). MUST stay op-identical between the reference and the
+    kernel body — bit-exact parity is an acceptance criterion."""
+    l = N.shape[-1]
+    colsum = N.sum(axis=-2)                              # (B, l)
+    w = (mu * N).sum(axis=-2)                            # (B, l)
+    X = jnp.where(colsum > 0, w / jnp.maximum(colsum, 1.0), 0.0)
+    m = sizes[None, :, None, None]                       # (1, M, 1, 1)
+    cb = colsum[:, None, None, :]                        # (B, 1, 1, l)
+    Xb = X[:, None, None, :]
+    mub = mu[:, None, :, :]                              # (B, 1, k, l)
+    add = m * (mub - Xb) / (cb + m)                      # (B, M, k, l)
+    rem = jnp.where(cb - m > 0.5,
+                    m * (Xb - mub) / jnp.maximum(cb - m, 1.0), -Xb)
+    rem = jnp.where(N[:, None, :, :] >= m, rem, _NEG)    # infeasible removes
+    gain = rem[..., :, None] + add[..., None, :]         # (B, M, k, l, l)
+    eye = jnp.eye(l, dtype=bool)[None, None, None]
+    return jnp.where(eye, _NEG, gain)
+
+
+def _select_body(gain):
+    """Shared move selection on a (B, M, k, l, l) gain tensor whose sizes
+    axis is the DESCENDING doubling ladder (2^(M-1), ..., 2, 1). Returns
+    (best_idx, best_gain, base_gain).
+
+    Direction (p, s, d): the steepest m=1 move — single-move GrIn's exact
+    choice. Size: the largest ladder entry whose whole prefix of doubling
+    slopes (average marginal gain of each size-doubling, via the cumulative
+    closed forms) stays >= max(second-best m=1 direction gain, 0). The
+    slope test is the run-length guard: the single-move path keeps choosing
+    this direction only while its marginal beats every alternative, so a
+    block whose marginals dip below the runner-up would overshoot into a
+    different basin (e.g. draining a whole column into a marginally faster
+    one when spreading is optimal). base_gain is the m=1 steepest gain —
+    the convergence signal."""
+    b, msz = gain.shape[:2]
+    dirs = gain.shape[2] * gain.shape[3] * gain.shape[4]
+    g1 = gain[:, -1].reshape(b, dirs)                    # m=1 slice
+    d1 = jnp.argmax(g1, axis=1)
+    base = jnp.max(g1, axis=1)
+    runner = jnp.max(jnp.where(
+        jax.nn.one_hot(d1, dirs, dtype=bool), _NEG, g1), axis=1)
+    thresh = jnp.maximum(runner, 0.0)
+    gd = gain.reshape(b, msz, dirs)
+    gsel = jnp.take_along_axis(
+        gd, d1[:, None, None], axis=2)[..., 0]           # (B, M) desc
+    gasc = gsel[:, ::-1]                                 # sizes 1, 2, 4, ...
+    sizes_asc = jnp.float32(2) ** jnp.arange(msz)
+    prev_g = jnp.concatenate(
+        [jnp.zeros((b, 1), gasc.dtype), gasc[:, :-1]], axis=1)
+    prev_s = jnp.concatenate([jnp.zeros(1), sizes_asc[:-1]])
+    slope = (gasc - prev_g) / (sizes_asc - prev_s)[None, :]
+    ok = slope >= thresh[:, None]         # infeasible -> -inf/nan -> False
+    prefix = jnp.cumprod(ok.astype(jnp.int32), axis=1).astype(bool)
+    idx_asc = jnp.maximum(prefix.sum(axis=1) - 1, 0)
+    best = jnp.take_along_axis(gasc, idx_asc[:, None], axis=1)[:, 0]
+    mi = (msz - 1) - idx_asc
+    idx = (mi * dirs + d1).astype(jnp.int32)
+    return idx, best, base
+
+
+def block_move_gains_ref(N, mu, sizes):
+    """Pure-jnp reference: (B, M, k, l, l) move gains."""
+    return _gains_body(jnp.asarray(N, jnp.float32),
+                       jnp.asarray(mu, jnp.float32),
+                       jnp.asarray(sizes, jnp.float32))
+
+
+def _kernel(n_ref, mu_ref, sz_ref, g_ref, bi_ref, bg_ref, b1_ref):
+    gain = _gains_body(n_ref[...], mu_ref[...], sz_ref[...])
+    g_ref[...] = gain.reshape(gain.shape[0], -1)         # (Bt, F)
+    bi, bg, base = _select_body(gain)
+    bi_ref[...] = bi[:, None]
+    bg_ref[...] = bg[:, None]
+    b1_ref[...] = base[:, None]
+
+
+def _kernel_select(n_ref, mu_ref, sz_ref, bi_ref, bg_ref, b1_ref):
+    """Selection-only variant: the solver loop discards the gains tensor, so
+    skipping its output saves the (Bt, F) write on every solver step."""
+    bi, bg, base = _select_body(
+        _gains_body(n_ref[...], mu_ref[...], sz_ref[...]))
+    bi_ref[...] = bi[:, None]
+    bg_ref[...] = bg[:, None]
+    b1_ref[...] = base[:, None]
+
+
+def block_move_gains_pallas(N, mu, sizes, *, block_b: int = 8,
+                            interpret: bool = False,
+                            return_gains: bool = True):
+    """Pallas path: grid over B-tiles; returns (gains (B, F) | None,
+    best_idx, best_gain, base_gain).
+
+    B is padded up to a block multiple with empty states (colsum 0 -> every
+    move infeasible, gains all -inf) and the pad is sliced away. With
+    `return_gains=False` the gains tensor is never written — the solver
+    loop only consumes the selection.
+    """
+    N = jnp.asarray(N, jnp.float32)
+    mu = jnp.asarray(mu, jnp.float32)
+    sizes = jnp.asarray(sizes, jnp.float32)
+    b, k, l = N.shape
+    msz = sizes.shape[0]
+    f = msz * k * l * l
+    bt = min(block_b, b)
+    pad = (-b) % bt
+    if pad:
+        N = jnp.pad(N, ((0, pad), (0, 0), (0, 0)))
+        mu = jnp.pad(mu, ((0, pad), (0, 0), (0, 0)))
+    bp = b + pad
+    sel_specs = [pl.BlockSpec((bt, 1), lambda i: (i, 0))] * 3
+    sel_shapes = [jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+                  jax.ShapeDtypeStruct((bp, 1), jnp.float32),
+                  jax.ShapeDtypeStruct((bp, 1), jnp.float32)]
+    if return_gains:
+        gains_spec = [pl.BlockSpec((bt, f), lambda i: (i, 0))]
+        gains_shape = [jax.ShapeDtypeStruct((bp, f), jnp.float32)]
+        kernel = _kernel
+    else:
+        gains_spec, gains_shape, kernel = [], [], _kernel_select
+    out = pl.pallas_call(
+        kernel,
+        grid=(bp // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, k, l), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bt, k, l), lambda i: (i, 0, 0)),
+            pl.BlockSpec((msz,), lambda i: (0,)),
+        ],
+        out_specs=gains_spec + sel_specs,
+        out_shape=gains_shape + sel_shapes,
+        compiler_params=_CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(N, mu, sizes)
+    gains = out[0][:b] if return_gains else None
+    bi, bg, base = out[-3:]
+    return gains, bi[:b, 0], bg[:b, 0], base[:b, 0]
+
+
+def block_move_scores(N, mu, sizes, *, use_kernel: bool | None = None,
+                      return_gains: bool = True):
+    """Score every (block size, type, src, dst) move for a batch of states
+    and select the next move per instance.
+
+    `sizes` must be DESCENDING with sizes[-1] == 1 (the solver's doubling
+    ladder). Returns (gains (B, F) | None, best_idx (B,), best_gain (B,),
+    base_gain (B,)): best_idx indexes the flattened (M, k, l, l) tensor at
+    the selected move (steepest m=1 direction, run-length-guarded block size
+    along it) and base_gain is the steepest m=1 gain — the convergence
+    signal. `return_gains=False` skips materializing the gains tensor (the
+    solver's hot loop). `use_kernel=None` picks the Pallas kernel on TPU (or
+    under REPRO_PALLAS_INTERPRET=1) and the jnp reference elsewhere; both
+    produce bit-identical outputs.
+    """
+    if use_kernel is None:
+        use_kernel = _use_pallas() or _interpret()
+    if use_kernel:
+        return block_move_gains_pallas(
+            N, mu, sizes, interpret=_interpret() or not _use_pallas(),
+            return_gains=return_gains)
+    gains = block_move_gains_ref(N, mu, sizes)
+    bi, bg, base = _select_body(gains)
+    return (gains.reshape(gains.shape[0], -1) if return_gains else None,
+            bi, bg, base)

@@ -2,7 +2,7 @@
 Policy/SchedulerCore scheduling API."""
 from repro.sched.api import (Policy, SchedulerCore, SystemView, as_core,
                              available_policies, get_policy, register_policy,
-                             solve_targets_jax)
+                             solve_targets_grid_jax, solve_targets_jax)
 from repro.sched.baselines import BaselineClusterScheduler
 from repro.sched.cluster import (ChipSpec, HeterogeneousCluster, Pool,
                                  PoolSpec, TaskRecord)

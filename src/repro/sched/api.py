@@ -25,7 +25,9 @@ Policies are constructed through a string registry:
     ('bf', 'cab', 'fixed', 'grin', 'grin+', 'jsq', 'lb', 'opt', 'rd', 'slsqp')
 
 `solve_targets_jax` batches target re-solves over many type-mixes on device
-(vmap of `grin_solve_jax`) for policy sweeps and piecewise-closed operation.
+(block-move GrIn; `solver="single"` keeps the one-move-per-step variant) and
+`solve_targets_grid_jax` solves whole (mu x mix) grids in one call — the
+substrate for `SchedulerCore.elastic_what_if` pool-loss/pool-add planning.
 `SchedulerCore.route_many` routes a whole burst of arrivals through one
 jit-compiled largest-deficit kernel for fleet-scale dispatch rates.
 """
@@ -40,10 +42,11 @@ import jax.numpy as jnp
 
 from repro.core.cab import cab_target_state
 from repro.core.exhaustive import exhaustive_solve
-from repro.core.grin import grin_solve, grin_solve_jax
+from repro.core.grin import grin_solve, grin_solve_batch_jax, grin_solve_jax
 from repro.core.grin_plus import grin_multistart_solve
 from repro.core.slsqp import round_largest_remainder, slsqp_solve
-from repro.core.throughput import system_throughput_batch_jax
+from repro.core.throughput import (system_throughput_batch_jax,
+                                   system_throughput_jax)
 from repro.train.fault_tolerance import StragglerTracker
 
 
@@ -256,28 +259,94 @@ class JoinShortestQueuePolicy(Policy):
 # ---------------------------------------------------------------------------
 
 @jax.jit
-def _solve_targets_jax(mu: jnp.ndarray, mixes: jnp.ndarray):
+def _solve_targets_single_jax(mu: jnp.ndarray, mixes: jnp.ndarray):
     targets = jax.vmap(lambda nt: grin_solve_jax(mu, nt))(mixes)
     xs = system_throughput_batch_jax(targets, mu)
     return targets, xs
 
 
-def solve_targets_jax(mu, n_tasks_batch):
+@jax.jit
+def _solve_targets_single_grid(mus: jnp.ndarray, mixes: jnp.ndarray):
+    targets, conv, _ = jax.vmap(
+        lambda m, nt: grin_solve_jax(m, nt, return_info=True))(mus, mixes)
+    xs = jax.vmap(system_throughput_jax)(targets, mus)
+    return targets, xs, conv
+
+
+def _repair_targets(raw: np.ndarray, mixes: np.ndarray) -> np.ndarray:
+    """Round float placements to integers with EXACT row sums.
+
+    The device solvers accumulate placements in float32, so a plain
+    `.round()` can drift a row off its task count on large mixes; rows that
+    drift are re-rounded by largest remainder (the same repair SLSQP uses).
+    """
+    raw = np.asarray(raw, dtype=np.float64)
+    mixes = np.asarray(mixes, dtype=np.int64)
+    out = raw.round().astype(np.int64)
+    for b in np.flatnonzero((out.sum(axis=-1) != mixes).any(axis=-1)):
+        out[b] = round_largest_remainder(raw[b], mixes[b])
+    return np.maximum(out, 0)
+
+
+def solve_targets_jax(mu, n_tasks_batch, solver: str = "block"):
     """Batched GrIn re-solve over many type mixes, vectorized on device.
 
-    Returns (targets (B, k, l) int64, x_sys (B,) float). Used for policy
-    sweeps and piecewise-closed target pre-warming where looping the NumPy
-    solver in Python would dominate. The JAX solver is the steepest-ascent
-    GrIn variant: it reaches a local maximum of the same objective but may
-    land in a different (rarely, slightly worse) basin than the sweep solver.
+    Returns (targets (B, k, l) int64, x_sys (B,) float), with row sums
+    repaired to match the mixes exactly. Used for policy sweeps and
+    piecewise-closed target pre-warming where looping the NumPy solver in
+    Python would dominate.
+
+    `solver="block"` (default) is the block-move GrIn — O(log N)-ish device
+    steps per solve; `solver="single"` keeps the one-move-per-step variant
+    (the PR 2 path, retained as the benchmark baseline). Both reach local
+    maxima of the same objective and may land in a different (same-quality-
+    class) basin than the host sweep solver.
     """
     mu = jnp.asarray(mu, dtype=jnp.float32)
-    mixes = jnp.asarray(n_tasks_batch, dtype=jnp.float32)
+    mixes_np = np.asarray(n_tasks_batch)
+    mixes = jnp.asarray(mixes_np, dtype=jnp.float32)
     if mixes.ndim != 2 or mixes.shape[1] != mu.shape[0]:
         raise ValueError(f"n_tasks_batch must be (B, k={mu.shape[0]}); got "
                          f"{tuple(mixes.shape)}")
-    targets, xs = _solve_targets_jax(mu, mixes)
-    return (np.asarray(targets).round().astype(np.int64), np.asarray(xs))
+    if solver == "block":
+        targets, xs, _, _ = grin_solve_batch_jax(mu, mixes_np)
+    elif solver == "single":
+        targets, xs = _solve_targets_single_jax(mu, mixes)
+    else:
+        raise ValueError(f"unknown solver {solver!r}: block | single")
+    return _repair_targets(np.asarray(targets), mixes_np), np.asarray(xs)
+
+
+def solve_targets_grid_jax(mus, mixes, solver: str = "block"):
+    """Whole (mu x mix) target grid in one device call.
+
+    mus: (G, k, l) affinity matrices; mixes: (M, k) type mixes. Returns
+    (targets (G, M, k, l) int64, x_sys (G, M), converged (G, M) bool). The
+    grid is flattened to a (G*M,) batch for `grin_solve_batch_jax`, so the
+    whole grid costs one compiled while-loop whose depth is the slowest
+    instance's block-move count. This is what makes thousand-point elastic /
+    energy what-if sweeps (mu batching) cheap enough to run interactively.
+    """
+    mus = np.asarray(mus, dtype=np.float64)
+    mixes = np.asarray(mixes, dtype=np.int64)
+    if mus.ndim != 3 or mixes.ndim != 2 or mus.shape[1] != mixes.shape[1]:
+        raise ValueError("need mus (G, k, l) and mixes (M, k) with matching "
+                         f"k; got {mus.shape} and {mixes.shape}")
+    G, k, l = mus.shape
+    M = mixes.shape[0]
+    mu_b = np.repeat(mus, M, axis=0)                    # (G*M, k, l)
+    mix_b = np.tile(mixes, (G, 1))                      # (G*M, k)
+    if solver == "block":
+        raw, xs, conv, _ = grin_solve_batch_jax(mu_b, mix_b)
+        conv = np.asarray(conv).reshape(G, M)
+    elif solver == "single":
+        raw, xs, conv = _solve_targets_single_grid(
+            jnp.asarray(mu_b, jnp.float32), jnp.asarray(mix_b, jnp.float32))
+        conv = np.asarray(conv).reshape(G, M)
+    else:
+        raise ValueError(f"unknown solver {solver!r}: block | single")
+    targets = _repair_targets(np.asarray(raw), mix_b).reshape(G, M, k, l)
+    return targets, np.asarray(xs).reshape(G, M), conv
 
 
 # ---------------------------------------------------------------------------
@@ -484,6 +553,63 @@ class SchedulerCore:
         for mix in mixes:
             self._target_for(mix)
         return self.resolves - before
+
+    def elastic_what_if(self, mixes=None, *, added_columns=None,
+                        warm: bool = True) -> dict:
+        """Elastic planning grids: X_sys for the current topology, for every
+        single-pool loss, and for each candidate added pool — each topology
+        group solved as one `solve_targets_grid_jax` device call.
+
+        mixes: (M, k) type mixes (default: the pinned mix); added_columns:
+        (A, k) candidate mu columns for `pool_added`. Returns
+        {"base": (M,), "pool_lost": (l, M), "pool_added": (A, M)} of X_sys
+        values, answering "what does losing pool j / adding this pool do to
+        achievable throughput across these mixes" without touching live
+        state. With `warm=True` the base-topology targets are inserted into
+        the target cache, so routing on any of the mixes after a
+        `notify_type_counts` is already warm.
+        """
+        if not self.policy.needs_target:
+            raise ValueError(f"{self.policy.name} routes statelessly; "
+                             "what-ifs apply to target policies")
+        if mixes is None:
+            if self._mix is None:
+                raise ValueError("no mixes given and no pinned type mix")
+            mixes = self._mix[None]
+        mixes = np.asarray(mixes, dtype=np.int64)
+
+        def grid(mus: np.ndarray):
+            if self.policy.supports_jax_batch:
+                targets, xs, _ = solve_targets_grid_jax(mus, mixes)
+                return targets, xs
+            from repro.core.throughput import system_throughput
+            targets = np.stack([
+                np.stack([np.asarray(self.policy.solve_target(m, mix))
+                          for mix in mixes]) for m in mus])
+            xs = np.array([[system_throughput(N, m)
+                            for N in row] for m, row in zip(mus, targets)])
+            return targets, xs
+
+        base_targets, base_xs = grid(self.mu[None])
+        if warm:
+            for mix, N in zip(mixes, base_targets[0]):
+                key = (tuple(int(x) for x in mix), self._mu_token)
+                if key not in self._targets:
+                    self._cache_put(key, N)
+        if self.l > 1:
+            _, lost_xs = grid(np.stack([np.delete(self.mu, j, axis=1)
+                                        for j in range(self.l)]))
+        else:
+            # losing the only pool leaves nowhere to run: X_sys = 0
+            lost_xs = np.zeros((1, len(mixes)))
+        if added_columns is not None and len(added_columns):
+            cols = np.asarray(added_columns, dtype=np.float64)
+            _, added_xs = grid(np.stack([
+                np.concatenate([self.mu, c[:, None]], axis=1) for c in cols]))
+        else:
+            added_xs = np.zeros((0, len(mixes)))
+        return {"base": base_xs[0], "pool_lost": lost_xs,
+                "pool_added": added_xs}
 
     # ---------------- routing ----------------
     def _internal_view(self) -> SystemView:

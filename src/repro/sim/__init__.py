@@ -2,8 +2,8 @@
 from repro.sim.distributions import (BoundedPareto, Constant, Exponential,
                                      TaskSizeDistribution, Uniform,
                                      make_distribution, DISTRIBUTIONS)
-from repro.sim.engine_jax import (simulate_batch, simulate_policy_jax,
-                                  sweep_jax)
+from repro.sim.engine_jax import (compare_policies_jax, simulate_batch,
+                                  simulate_policy_jax, sweep_jax)
 from repro.sim.simulator import (ClosedNetworkSimulator, SimConfig,
                                  SimMetrics, run_policy_sweep)
 

@@ -1,29 +1,37 @@
 """Batched on-device closed-network simulation (`lax.scan` event core).
 
 One device call simulates a whole fleet of closed networks: the per-event
-logic (next completion, PS/FCFS depletion, largest-deficit routing, task-size
-sampling) is a `lax.scan` step, and `vmap` batches it over seeds, type mixes,
-targets, and affinity matrices — a Figs. 4-12-style sweep runs as a single
-XLA program instead of thousands of Python events per point.
+logic (next completion, PS/FCFS depletion, routing, task-size sampling) is a
+`lax.scan` step, and `vmap` batches it over seeds, type mixes, targets,
+affinity matrices, and now routing policies — a Figs. 4-12-style sweep runs
+as a single XLA program instead of thousands of Python events per point.
 
 Scope and semantics:
 
-  * Target (deficit-routing) policies only: the placement target N* is solved
-    on the host (or batched via `solve_targets_jax`) and pinned per point;
-    routing on device uses the same strict lexicographic deficit key as
+  * Per-point route modes: deficit (target policies), JSQ, and LB. Deficit
+    routing uses the same strict lexicographic key as
     `SchedulerCore.route_many`, so given identical event sequences the route
-    decisions match the host rule exactly.
+    decisions match the host rule exactly. JSQ picks the fewest-resident
+    column (lowest index on ties, like `np.argmin`); LB picks the column
+    with the least remaining true work, tracked per task in work units that
+    deplete with service received (the host compat loop's semantics).
+    RD/BF and custom SystemView choosers stay host-only.
+  * Targets are solved on the host or batched on device
+    (`solve_targets_jax` / whole (mu x mix) grids via
+    `solve_targets_grid_jax` when `mus` is batched).
   * Sizes come from JAX's counter-based RNG, not NumPy's stream: results are
     statistically equivalent to the host core, not bit-identical (the parity
     suite pins throughput/energy/Little's-law agreement instead).
   * float32 state (device-friendly); fine for the paper's metric tolerances.
   * Fixed closed populations (no piecewise type re-draw): callers with
     `type_mix` fall back to the host core.
+
+`compare_policies_jax` runs a full Fig. 9-style policy comparison — every
+target policy plus the LB/JSQ baselines — as ONE batched device call.
 """
 from __future__ import annotations
 
 import functools
-from itertools import product
 
 import numpy as np
 
@@ -32,9 +40,14 @@ import jax.numpy as jnp
 
 from repro.core.affinity import PowerModel, PROPORTIONAL_POWER
 from repro.sched.api import (_mu_tiebreak_ranks, deficit_route_jax,
-                             solve_targets_jax)
+                             solve_targets_grid_jax, solve_targets_jax)
 
 _BIG_STAMP = np.int32(2**31 - 1)
+
+# Route modes carried per batch point (data, not trace-time statics, so one
+# compiled program serves mixed-policy batches).
+MODE_DEFICIT, MODE_JSQ, MODE_LB = 0, 1, 2
+_BASELINE_MODES = {"jsq": MODE_JSQ, "lb": MODE_LB}
 
 
 def _dist_spec(distribution) -> tuple:
@@ -68,36 +81,49 @@ def _size_sampler(spec: tuple):
 
 @functools.partial(jax.jit, static_argnames=("order", "dist_spec",
                                              "n_steps", "warmup"))
-def _simulate_fleet(mu, P, target, rank, types0, keys, *, order, dist_spec,
-                    n_steps, warmup):
+def _simulate_fleet(mu, P, target, rank, types0, keys, modes, *, order,
+                    dist_spec, n_steps, warmup):
     """vmapped scan core. All array args carry a leading batch axis B:
-    mu/P/target/rank (B, k, l), types0 (B, n), keys (B, 2)."""
+    mu/P/target/rank (B, k, l), types0 (B, n), keys (B, 2), modes (B,)."""
     sample = _size_sampler(dist_spec)
 
-    def one(mu, P, target, rank, types0, key):
+    def one(mu, P, target, rank, types0, key, mode):
         k, l = mu.shape
         n = types0.shape[0]
         order_ps = order == "PS"
 
-        # ---- initial admissions: sequential largest-deficit routing ----
-        def init_route(counts, t):
-            j = deficit_route_jax(target, rank, counts, t)
-            return counts.at[t, j].add(1), j
+        def route_one(counts, backlog, t):
+            j_def = deficit_route_jax(target, rank, counts, t)
+            j_jsq = jnp.argmin(counts.sum(0))
+            j_lb = jnp.argmin(backlog)
+            return jnp.where(mode == MODE_JSQ, j_jsq,
+                             jnp.where(mode == MODE_LB, j_lb, j_def))
 
-        counts0, proc0 = jax.lax.scan(
-            init_route, jnp.zeros((k, l), jnp.int32), types0)
+        # ---- initial admissions: sequential routing, sizes pre-drawn (the
+        # routing consumes no randomness, so the stream is unchanged) ----
         key, sub = jax.random.split(key)
         sizes0 = jax.vmap(sample)(jax.random.split(sub, n))
+
+        def init_route(carry, ts):
+            counts, backlog = carry
+            t, s = ts
+            j = route_one(counts, backlog, t)
+            return (counts.at[t, j].add(1), backlog.at[j].add(s)), j
+
+        (counts0, _), proc0 = jax.lax.scan(
+            init_route,
+            (jnp.zeros((k, l), jnp.int32), jnp.zeros(l, jnp.float32)),
+            (types0, sizes0))
         need0 = sizes0 / mu[types0, proc0]
 
-        state = (key, jnp.float32(0.0), proc0, need0, need0,
+        state = (key, jnp.float32(0.0), proc0, need0, need0, sizes0,
                  jnp.zeros(n, jnp.float32), jnp.arange(n, dtype=jnp.int32),
                  counts0, jnp.float32(0.0), jnp.float32(0.0),
                  jnp.float32(0.0), jnp.zeros((k, l), jnp.float32))
 
         def step(state, i):
-            (key, now, proc, remaining, need, entry, stamp, counts,
-             t_start, sum_resp, sum_energy, occ) = state
+            (key, now, proc, remaining, need, size_left, entry, stamp,
+             counts, t_start, sum_resp, sum_energy, occ) = state
             mask = proc[:, None] == jnp.arange(l)[None, :]       # (n, l)
             cnt = mask.sum(0)
             cntf = cnt.astype(jnp.float32)
@@ -112,12 +138,18 @@ def _simulate_fleet(mu, P, target, rank, types0, keys, *, order, dist_spec,
             dt = dtj[j_star]
             now = now + dt
             if order_ps:
-                remaining = remaining - dt / cntf[proc]
+                dep = dt / cntf[proc]                            # (n,)
+                remaining = remaining - dep
                 pid = jnp.argmin(jnp.where(proc == j_star, remaining, jnp.inf))
             else:
                 is_head = jnp.arange(n, dtype=jnp.int32) == head[proc]
-                remaining = remaining - jnp.where(is_head, dt, 0.0)
+                dep = jnp.where(is_head, dt, 0.0)
+                remaining = remaining - dep
                 pid = head[j_star]
+            # true remaining work depletes with service received (host compat
+            # loop semantics: size_left -= (dep/need) * size_left)
+            frac = jnp.where(need > 0, dep / need, 1.0)
+            size_left = jnp.maximum(size_left - frac * size_left, 0.0)
 
             t = types0[pid]
             in_win = i >= warmup
@@ -128,38 +160,46 @@ def _simulate_fleet(mu, P, target, rank, types0, keys, *, order, dist_spec,
                 in_win, P[t, j_star] * need[pid], 0.0)
             t_start = jnp.where(i == warmup - 1, now, t_start)
 
-            # closed system: the program's next task routes immediately
-            j_new = deficit_route_jax(target, rank, counts, t)
+            # closed system: the program's next task routes immediately (the
+            # completed task is gone from the LB backlog, like the host view)
+            size_left = size_left.at[pid].set(0.0)
+            backlog = jnp.where(mask, size_left[:, None], 0.0).sum(0)
+            j_new = route_one(counts, backlog, t)
             counts = counts.at[t, j_new].add(1)
             key, sub = jax.random.split(key)
-            sn = sample(sub) / mu[t, j_new]
+            s_new = sample(sub)
+            sn = s_new / mu[t, j_new]
             remaining = remaining.at[pid].set(sn)
             need = need.at[pid].set(sn)
+            size_left = size_left.at[pid].set(s_new)
             entry = entry.at[pid].set(now)
             proc = proc.at[pid].set(j_new)
             stamp = stamp.at[pid].set(n + i)
-            return (key, now, proc, remaining, need, entry, stamp, counts,
-                    t_start, sum_resp, sum_energy, occ), None
+            return (key, now, proc, remaining, need, size_left, entry, stamp,
+                    counts, t_start, sum_resp, sum_energy, occ), None
 
         state, _ = jax.lax.scan(step, state,
                                 jnp.arange(n_steps, dtype=jnp.int32))
-        (_, now, _, _, _, _, _, _, t_start, sum_resp, sum_energy, occ) = state
+        (_, now, _, _, _, _, _, _, _, t_start, sum_resp, sum_energy,
+         occ) = state
         measured = jnp.float32(n_steps - warmup)
         elapsed = now - t_start
         x = measured / elapsed
         return (x, sum_resp / measured, sum_energy / measured, elapsed,
                 occ / elapsed)
 
-    return jax.vmap(one)(mu, P, target, rank, types0, keys)
+    return jax.vmap(one)(mu, P, target, rank, types0, keys, modes)
 
 
 def simulate_batch(mu, targets, types0, seeds, *, distribution, order="PS",
                    n_completions, warmup_completions,
-                   power: PowerModel = PROPORTIONAL_POWER):
+                   power: PowerModel = PROPORTIONAL_POWER, modes=None):
     """Simulate B closed networks in one device call.
 
     mu: (k, l) shared or (B, k, l) per-point; targets: (B, k, l) pinned
-    placements; types0: (B, n) initial program types; seeds: (B,) ints.
+    placements; types0: (B, n) initial program types; seeds: (B,) ints;
+    modes: (B,) route modes (MODE_DEFICIT default, MODE_JSQ, MODE_LB —
+    baseline points ignore their target rows).
     Returns a dict of NumPy arrays: throughput/mean_response_time/mean_energy
     /edp/little_product (B,), elapsed (B,), state_occupancy (B, k, l).
     """
@@ -174,6 +214,10 @@ def simulate_batch(mu, targets, types0, seeds, *, distribution, order="PS",
         raise ValueError(f"types0 must be (B, n); got {types0.shape}")
     if not 0 <= warmup_completions < n_completions:
         raise ValueError("need 0 <= warmup_completions < n_completions")
+    modes = (np.zeros(B, dtype=np.int32) if modes is None
+             else np.asarray(modes, dtype=np.int32))
+    if modes.shape != (B,) or modes.min() < 0 or modes.max() > MODE_LB:
+        raise ValueError(f"modes must be (B,) ints in [0, {MODE_LB}]")
     if mu.ndim == 2:                # shared mu: derive P/ranks once, tile
         P = np.broadcast_to(power.power_matrix(mu), (B, k, l))
         ranks = np.broadcast_to(_mu_tiebreak_ranks(mu), (B, k, l))
@@ -184,7 +228,8 @@ def simulate_batch(mu, targets, types0, seeds, *, distribution, order="PS",
     x, et, ee, elapsed, occ = _simulate_fleet(
         jnp.asarray(mus, jnp.float32), jnp.asarray(P, jnp.float32),
         jnp.asarray(targets, jnp.int32), jnp.asarray(ranks), types0,
-        jnp.asarray(keys), order=order, dist_spec=_dist_spec(distribution),
+        jnp.asarray(keys), jnp.asarray(modes), order=order,
+        dist_spec=_dist_spec(distribution),
         n_steps=int(n_completions), warmup=int(warmup_completions))
     x, et, ee = (np.asarray(v, np.float64) for v in (x, et, ee))
     occ = np.asarray(occ, np.float64)
@@ -201,29 +246,49 @@ def _types0_for(mix: np.ndarray) -> np.ndarray:
     return np.repeat(np.arange(len(mix)), mix).astype(np.int32)
 
 
+def _device_route_mode(pol) -> int:
+    """Route mode for a policy, or raise for host-only SystemView policies."""
+    if pol.needs_target:
+        return MODE_DEFICIT
+    mode = _BASELINE_MODES.get(pol.key)
+    if mode is None:
+        raise ValueError(
+            f"{pol.name} routes on a SystemView with no on-device variant "
+            "(only LB/JSQ have one); use the host simulator")
+    return mode
+
+
 def simulate_policy_jax(cfg, core) -> "SimMetrics":
     """Device-engine replacement for `ClosedNetworkSimulator.run` for one
-    target-policy config (fixed populations)."""
+    target-policy (or LB/JSQ baseline) config with fixed populations."""
     from repro.sim.simulator import SimMetrics
     if cfg.type_mix is not None:
         raise ValueError("piecewise type_mix runs on the host core")
     mu = np.asarray(cfg.mu, dtype=np.float64)
     mix = np.asarray(cfg.n_programs_per_type, dtype=np.int64)
-    target = np.asarray(core.policy.solve_target(mu, mix))
+    mode = _device_route_mode(core.policy)
+    target = (np.asarray(core.policy.solve_target(mu, mix))
+              if mode == MODE_DEFICIT else np.zeros(mu.shape, np.int64))
     out = simulate_batch(
         mu, target[None], _types0_for(mix)[None], [cfg.seed],
         distribution=cfg.distribution, order=cfg.order,
         n_completions=cfg.n_completions,
-        warmup_completions=cfg.warmup_completions, power=cfg.power)
+        warmup_completions=cfg.warmup_completions, power=cfg.power,
+        modes=[mode])
+    return _metrics_row(out, 0)
+
+
+def _metrics_row(out: dict, i: int) -> "SimMetrics":
+    from repro.sim.simulator import SimMetrics
     return SimMetrics(
-        throughput=float(out["throughput"][0]),
-        mean_response_time=float(out["mean_response_time"][0]),
-        mean_energy=float(out["mean_energy"][0]),
-        edp=float(out["edp"][0]),
-        little_product=float(out["little_product"][0]),
-        completed=int(out["completed"][0]),
-        elapsed=float(out["elapsed"][0]),
-        state_occupancy=out["state_occupancy"][0])
+        throughput=float(out["throughput"][i]),
+        mean_response_time=float(out["mean_response_time"][i]),
+        mean_energy=float(out["mean_energy"][i]),
+        edp=float(out["edp"][i]),
+        little_product=float(out["little_product"][i]),
+        completed=int(out["completed"][i]),
+        elapsed=float(out["elapsed"][i]),
+        state_occupancy=out["state_occupancy"][i])
 
 
 def sweep_jax(cfg, policy, *, mixes=None, seeds=None, mus=None):
@@ -232,15 +297,15 @@ def sweep_jax(cfg, policy, *, mixes=None, seeds=None, mus=None):
     `mixes` (M, k) must all sum to the same N (the closed population is the
     batch-static program count); `mus` (G, k, l) batches affinity matrices
     (elastic what-if); `seeds` (S,) replicates. Targets re-solve per
-    (mu, mix) — batched on device when the policy supports it. Returns
-    (grid, results): `grid` is a list of (mu_index, mix, seed) per point and
-    `results` the `simulate_batch` dict over the B = G*M*S points.
+    (mu, mix) — the whole grid in one `solve_targets_grid_jax` call when the
+    policy batches on device. LB/JSQ run as on-device baseline modes (their
+    target rows are zeros). Returns (grid, results): `grid` is a list of
+    (mu_index, mix, seed) per point and `results` the `simulate_batch` dict
+    over the B = G*M*S points.
     """
     from repro.sched.api import get_policy
     pol = get_policy(policy)
-    if not pol.needs_target:
-        raise ValueError(f"{pol.name} routes on a SystemView; "
-                         "use the host simulator")
+    mode = _device_route_mode(pol)
     if cfg.type_mix is not None:
         raise ValueError("piecewise type_mix runs on the host core")
     base_mix = np.asarray(cfg.n_programs_per_type, dtype=np.int64)
@@ -252,14 +317,15 @@ def sweep_jax(cfg, policy, *, mixes=None, seeds=None, mus=None):
     mus = (np.asarray(cfg.mu, np.float64)[None] if mus is None
            else np.asarray(mus, np.float64))
 
-    per_mu_targets = []
-    for m in mus:
-        if pol.supports_jax_batch:
-            targets, _ = solve_targets_jax(m, mixes)
-        else:
-            targets = np.stack([np.asarray(pol.solve_target(m, mix))
-                                for mix in mixes])
-        per_mu_targets.append(targets)
+    if mode != MODE_DEFICIT:
+        per_mu_targets = np.zeros(
+            (len(mus), len(mixes)) + mus.shape[1:], dtype=np.int64)
+    elif pol.supports_jax_batch:
+        per_mu_targets, _, _ = solve_targets_grid_jax(mus, mixes)
+    else:
+        per_mu_targets = np.stack([
+            np.stack([np.asarray(pol.solve_target(m, mix)) for mix in mixes])
+            for m in mus])
 
     grid, mu_b, tgt_b, types_b, seed_b = [], [], [], [], []
     for gi, (m, targets) in enumerate(zip(mus, per_mu_targets)):
@@ -277,5 +343,49 @@ def sweep_jax(cfg, policy, *, mixes=None, seeds=None, mus=None):
         np.stack(tgt_b), np.stack(types_b), seed_b,
         distribution=cfg.distribution, order=cfg.order,
         n_completions=cfg.n_completions,
-        warmup_completions=cfg.warmup_completions, power=cfg.power)
+        warmup_completions=cfg.warmup_completions, power=cfg.power,
+        modes=np.full(len(grid), mode, dtype=np.int32))
     return grid, results
+
+
+def compare_policies_jax(cfg, policies, seeds=None) -> dict:
+    """Fig. 9-style policy comparison as ONE batched device call.
+
+    Every target policy (deficit routing toward its solved N*) and the
+    LB/JSQ on-device baselines simulate side by side in a single
+    `simulate_batch`; RD/BF and custom choosers raise (host-only). Returns
+    {display name: SimMetrics} — or {name: [SimMetrics per seed]} when
+    `seeds` is given. Duplicate display names disambiguate as in
+    `run_policy_sweep` ("Opt", "Opt#2", ...).
+    """
+    from repro.sched.api import as_core
+    if cfg.type_mix is not None:
+        raise ValueError("piecewise type_mix runs on the host core")
+    mu = np.asarray(cfg.mu, dtype=np.float64)
+    mix = np.asarray(cfg.n_programs_per_type, dtype=np.int64)
+    single = seeds is None
+    seed_list = [int(cfg.seed)] if single else [int(s) for s in seeds]
+    names, tgts, modes = [], [], []
+    for c in (as_core(p, mu) for p in policies):
+        key, n = c.name, 2
+        while key in names:
+            key = f"{c.name}#{n}"
+            n += 1
+        names.append(key)
+        mode = _device_route_mode(c.policy)
+        modes.append(mode)
+        tgts.append(np.asarray(c.policy.solve_target(mu, mix))
+                    if mode == MODE_DEFICIT
+                    else np.zeros(mu.shape, np.int64))
+    t0 = _types0_for(mix)
+    S = len(seed_list)
+    out = simulate_batch(
+        mu, np.stack([t for t in tgts for _ in range(S)]),
+        np.tile(t0, (len(names) * S, 1)), seed_list * len(names),
+        distribution=cfg.distribution, order=cfg.order,
+        n_completions=cfg.n_completions,
+        warmup_completions=cfg.warmup_completions, power=cfg.power,
+        modes=np.repeat(modes, S))
+    rows = {name: [_metrics_row(out, i * S + s) for s in range(S)]
+            for i, name in enumerate(names)}
+    return {k: v[0] for k, v in rows.items()} if single else rows

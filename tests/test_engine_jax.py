@@ -11,7 +11,8 @@ import numpy as np
 import pytest
 
 from repro.sched import SchedulerCore, get_policy
-from repro.sim import (ClosedNetworkSimulator, SimConfig, make_distribution,
+from repro.sim import (ClosedNetworkSimulator, SimConfig,
+                       compare_policies_jax, make_distribution,
                        run_policy_sweep, simulate_batch, simulate_policy_jax,
                        sweep_jax)
 
@@ -106,8 +107,65 @@ def test_sweep_jax_grid_and_batching():
     # population-changing mixes are rejected (closed system)
     with pytest.raises(ValueError, match="closed population"):
         sweep_jax(cfg, "grin", mixes=np.array([[1, 1, 1]]))
+    # RD/BF have no on-device route mode (LB/JSQ do, see below)
     with pytest.raises(ValueError, match="SystemView"):
-        sweep_jax(cfg, "lb")
+        sweep_jax(cfg, "rd")
+
+
+def test_sweep_jax_batches_affinity_grid():
+    """`mus` batching: the (mu x mix x seed) grid runs as one device call
+    with targets grid-solved per (mu, mix)."""
+    cfg = _cfg(n_completions=1500, warmup_completions=300)
+    mixes = np.array([[10, 10, 10], [5, 15, 10]])
+    mus = np.stack([MU3, np.random.default_rng(9).uniform(1, 30, (3, 3))])
+    grid, res = sweep_jax(cfg, "grin", mixes=mixes, seeds=[0, 1], mus=mus)
+    assert len(grid) == 8 and res["throughput"].shape == (8,)
+    assert np.all(res["throughput"] > 0)
+    assert [g[0] for g in grid] == [0] * 4 + [1] * 4
+    # per-point (mu, mix) solve: first mu's points match the single-mu sweep
+    _, res_single = sweep_jax(cfg, "grin", mixes=mixes, seeds=[0, 1])
+    np.testing.assert_allclose(res["throughput"][:4],
+                               res_single["throughput"], rtol=1e-6)
+
+
+# --------------------------------------------------- on-device baselines
+
+@pytest.mark.parametrize("order", ["PS", "FCFS"])
+@pytest.mark.parametrize("policy", ["jsq", "lb"])
+def test_device_baselines_match_host_metrics(policy, order):
+    """LB/JSQ run on-device as route modes; same statistical-parity bars as
+    the deficit engine (different RNG stream, same model)."""
+    cfg = _cfg(order=order, n_completions=6000, warmup_completions=1200)
+    host = ClosedNetworkSimulator(cfg).run(policy)
+    dev = simulate_policy_jax(cfg, SchedulerCore(policy, cfg.mu))
+    assert dev.throughput == pytest.approx(host.throughput, rel=0.08)
+    assert dev.mean_response_time == pytest.approx(
+        host.mean_response_time, rel=0.1)
+    assert dev.little_product == pytest.approx(NT3.sum(), rel=0.05)
+    assert dev.mean_energy == pytest.approx(1.0, rel=0.08)   # eq. 23
+
+
+def test_device_baselines_rank_like_host():
+    """Fig. 9 structure must survive the engine change: GrIn > JSQ > LB on
+    this workload, same order the host simulator produces."""
+    cfg = _cfg(n_completions=5000, warmup_completions=1000)
+    out = compare_policies_jax(cfg, ["grin", "jsq", "lb"])
+    assert out["GrIn"].throughput > out["JSQ"].throughput > out["LB"].throughput
+
+
+def test_compare_policies_jax_one_call():
+    cfg = _cfg(n_completions=2500, warmup_completions=500)
+    out = compare_policies_jax(cfg, ["grin", "slsqp", "lb", "jsq"])
+    assert set(out) == {"GrIn", "SLSQP", "LB", "JSQ"}
+    host = run_policy_sweep(cfg, ["grin", "lb", "jsq"])
+    for name in ("GrIn", "LB", "JSQ"):
+        assert out[name].throughput == pytest.approx(
+            host[name].throughput, rel=0.1), name
+    multi = compare_policies_jax(cfg, ["grin", "lb"], seeds=[0, 1])
+    assert len(multi["GrIn"]) == 2 and len(multi["LB"]) == 2
+    assert multi["GrIn"][0].throughput != multi["GrIn"][1].throughput
+    with pytest.raises(ValueError, match="SystemView"):
+        compare_policies_jax(cfg, ["grin", "rd"])
 
 
 def test_simulate_batch_validates_shapes():
