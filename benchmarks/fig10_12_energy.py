@@ -1,0 +1,163 @@
+"""Figs. 10-12: energy efficiency of optimal-placement scheduling vs the
+classic baselines (paper Sec. 5, eq. 19-23). Claim: the throughput-optimal
+policy is 1.08x~2.26x more energy-efficient than load balancing.
+
+Every (sample, policy, seed) point of a power scenario runs as ONE batched
+`simulate_batch` device call (per-point mu/target/mode rows). Efficiency is
+measured the way the paper's scenarios make meaningful:
+
+  * PROPORTIONAL power (Scenario 2, eq. 23): E[E] per task is the constant
+    k_coeff for EVERY placement, so the energy-efficiency gap is the
+    energy-delay product — EDP_LB / EDP_GrIn-E per sample.
+  * CONSTANT power (Scenario 1, eq. 22): E[E] = l_busy / X, so the gap
+    shows up directly in energy per task — E_LB / E_GrIn-E per sample.
+
+Also records the model cross-check: GrIn-E's simulated E/task vs the
+closed-form `expected_energy_per_task` of its target (host float64 and the
+batched device float32 form, which must agree to float32 tolerance).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import Timer, emit, save_json
+from repro.core import expected_energy_per_task, random_affinity_matrix
+from repro.core.energy import expected_energy_batch_jax
+from repro.core.affinity import CONSTANT_POWER, PROPORTIONAL_POWER
+from repro.sched import get_policy
+from repro.sim import make_distribution
+from repro.sim.engine_jax import (MODE_DEFICIT, _BASELINE_MODES, _types0_for,
+                                  simulate_batch)
+
+POLICIES = ("grin-e", "grin", "grin-edp", "lb", "jsq")
+SCENARIOS = (("proportional", PROPORTIONAL_POWER),
+             ("constant", CONSTANT_POWER))
+
+
+def _policy_rows(name, mu, mix, power):
+    """(display, mode, target) for one policy on one sampled system."""
+    pol = (get_policy(name, power=power) if name in ("grin-e", "grin-edp")
+           else get_policy(name))
+    if pol.needs_target:
+        return pol.name, MODE_DEFICIT, np.asarray(pol.solve_target(mu, mix))
+    return pol.name, _BASELINE_MODES[pol.key], np.zeros(mu.shape, np.int64)
+
+
+def run(n_samples: int = 8, n_completions: int = 6000,
+        warmup_completions: int = 1200, seeds=(0, 1, 2), seed: int = 3,
+        smoke: bool = False):
+    if smoke:
+        n_samples, n_completions, warmup_completions, seeds = 2, 900, 180, (0,)
+    rng = np.random.default_rng(seed)
+    systems = []
+    for _ in range(n_samples):
+        mu = random_affinity_matrix(rng, 3, 3)
+        # fixed closed population (the batch shares one program count);
+        # every type keeps at least one program, like the Fig. 9 workload
+        mix = rng.multinomial(30 - 3, [1 / 3] * 3) + 1
+        systems.append((mu, mix))
+    dist = make_distribution("exponential")
+    payload = {"smoke": smoke, "n_samples": n_samples,
+               "n_completions": n_completions, "seeds": list(seeds),
+               "policies": list(POLICIES), "paper_band": [1.08, 2.26]}
+    S = len(seeds)
+    for scen_name, power in SCENARIOS:
+        mu_b, tgt_b, types_b, seed_b, modes, names, sysid = \
+            [], [], [], [], [], [], []
+        model_e = {}                         # (sample, policy) -> closed form
+        ge_targets = {}                      # sample -> GrIn-E target
+        for si, (mu, mix) in enumerate(systems):
+            t0 = _types0_for(mix)
+            for pname in POLICIES:
+                disp, mode, target = _policy_rows(pname, mu, mix, power)
+                if mode == MODE_DEFICIT:
+                    model_e[(si, disp)] = expected_energy_per_task(
+                        target, mu, power)
+                if disp == "GrIn-E":
+                    ge_targets[si] = target
+                for s in seeds:
+                    mu_b.append(mu)
+                    tgt_b.append(target)
+                    types_b.append(t0)
+                    seed_b.append(int(s))
+                    modes.append(mode)
+                    names.append(disp)
+                    sysid.append(si)
+        with Timer() as t:
+            out = simulate_batch(
+                np.stack(mu_b), np.stack(tgt_b), np.stack(types_b), seed_b,
+                distribution=dist, order="PS", n_completions=n_completions,
+                warmup_completions=warmup_completions, power=power,
+                modes=np.asarray(modes, np.int32))
+
+        # seed-averaged per (sample, policy) metrics
+        rows = {}
+        for i, (si, disp) in enumerate(zip(sysid, names)):
+            r = rows.setdefault((si, disp), {"x": [], "e": [], "edp": []})
+            r["x"].append(out["throughput"][i])
+            r["e"].append(out["mean_energy"][i])
+            r["edp"].append(out["edp"][i])
+        summary = {}
+        for (si, disp), r in rows.items():
+            summary.setdefault(disp, []).append(
+                {k: float(np.mean(v)) for k, v in r.items()})
+        per_policy = {disp: {m: float(np.mean([s[m] for s in lst]))
+                             for m in ("x", "e", "edp")}
+                      for disp, lst in summary.items()}
+
+        # energy-efficiency band over LB, per sample
+        band_metric = "edp" if scen_name == "proportional" else "e"
+        ratios = [summary["LB"][si][band_metric]
+                  / summary["GrIn-E"][si][band_metric]
+                  for si in range(n_samples)]
+        # device-f32 closed form vs host f64 closed form (GrIn-E targets)
+        f32_gap = []
+        sim_gap = []
+        for si, (mu, mix) in enumerate(systems):
+            target = ge_targets[si]
+            e_host = model_e[(si, "GrIn-E")]
+            e_dev = float(expected_energy_batch_jax(
+                target[None], mu, power.power_matrix(mu))[0])
+            f32_gap.append(abs(e_dev - e_host) / max(abs(e_host), 1e-12))
+            sim_gap.append(abs(summary["GrIn-E"][si]["e"] - e_host)
+                           / max(abs(e_host), 1e-12))
+        payload[scen_name] = {
+            "per_policy": per_policy,
+            "band_metric": band_metric,
+            "lb_over_grin_e": {"min": float(np.min(ratios)),
+                               "mean": float(np.mean(ratios)),
+                               "max": float(np.max(ratios))},
+            "grin_e_model_f32_vs_f64_max_rel": float(np.max(f32_gap)),
+            "grin_e_sim_vs_model_max_rel": float(np.max(sim_gap)),
+            "batch_points": len(names),
+            "wall_s": t.dt,
+        }
+        emit(f"fig10_12_energy_{scen_name}", t.us / len(names),
+             f"LB/GrIn-E {band_metric}: {np.min(ratios):.2f}x~"
+             f"{np.max(ratios):.2f}x (paper 1.08x~2.26x);"
+             f"points={len(names)};wall={t.dt:.2f}s")
+
+        # sanity floor: the optimal-placement policy must not be less
+        # energy-efficient than LB on any sampled system
+        assert np.min(ratios) > 0.99, ratios
+        assert payload[scen_name]["grin_e_model_f32_vs_f64_max_rel"] < 1e-5
+        assert payload[scen_name]["grin_e_sim_vs_model_max_rel"] < 0.06
+
+    save_json("fig10_12_energy", payload)
+    if not smoke:
+        with open(os.path.join(os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__))), "BENCH_pr4.json"), "w") as f:
+            json.dump(payload, f, indent=1)
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized invocation (no BENCH_pr4.json rewrite)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

@@ -6,19 +6,27 @@ from repro.core.affinity import (AffinityCase, PowerModel, CONSTANT_POWER,
                                  PROPORTIONAL_POWER, classify_2x2,
                                  random_affinity_matrix, validate_affinity_2x2)
 from repro.core.cab import CABSolution, cab_closed_form_x, cab_solve, cab_target_state
-from repro.core.energy import edp, expected_delay, expected_energy_per_task
+from repro.core.energy import (edp, edp_batch_jax, expected_delay,
+                               expected_delay_batch_jax,
+                               expected_energy_batch_jax,
+                               expected_energy_per_task, power_matrix_jax,
+                               scenario_identities)
 from repro.core.exhaustive import exhaustive_count, exhaustive_solve
 from repro.core.grin import (GrInBlockResult, GrInResult, grin_block_solve,
                              grin_init, grin_solve, grin_solve_batch_jax,
                              grin_solve_jax)
+from repro.core.grin_energy import GrInEnergyResult, grin_energy_solve
 from repro.core.grin_plus import (grin_multistart_solve, grin_plus_solve,
                                   grin_solve_from)
 from repro.core.slsqp import (SLSQPResult, round_largest_remainder,
                               slsqp_solve)
-from repro.core.throughput import (column_throughputs, delta_x_add,
+from repro.core.throughput import (column_throughputs, delta_edp_move_block,
+                                   delta_energy_move_block, delta_w_add_block,
+                                   delta_w_remove_block, delta_x_add,
                                    delta_x_add_block, delta_x_remove,
-                                   delta_x_remove_block, state_from_pair,
-                                   system_throughput, system_throughput_jax,
-                                   throughput_2x2, throughput_map_2x2)
+                                   delta_x_remove_block, power_rate_columns,
+                                   state_from_pair, system_throughput,
+                                   system_throughput_jax, throughput_2x2,
+                                   throughput_map_2x2)
 
 __all__ = [s for s in dir() if not s.startswith("_")]

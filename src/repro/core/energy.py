@@ -1,7 +1,15 @@
-"""Energy / EDP model (paper Sec. 3.4, eq. 19-23, Lemmas 5-7)."""
+"""Energy / EDP model (paper Sec. 3.4, eq. 19-23, Lemmas 5-7).
+
+Host (float64) scalar forms plus batched JAX (B, k, l) forms: the JAX
+variants are the device-resident objective surface the energy-aware GrIn
+solvers (`grin_solve_batch_jax(objective=...)`) and the elastic energy
+what-ifs price placements with — one vectorized call per (mu x mix) grid.
+"""
 from __future__ import annotations
 
 import numpy as np
+
+import jax.numpy as jnp
 
 from repro.core.affinity import PowerModel
 from repro.core.throughput import system_throughput
@@ -33,6 +41,53 @@ def expected_delay(N: np.ndarray, mu: np.ndarray) -> float:
 def edp(N: np.ndarray, mu: np.ndarray, power: PowerModel) -> float:
     """Energy-Delay Product (eq. 21)."""
     return expected_energy_per_task(N, mu, power) * expected_delay(N, mu)
+
+
+# ---------------------------------------------------------------------------
+# Batched JAX forms (eq. 19-21 over a (B, k, l) batch of placements).
+# ---------------------------------------------------------------------------
+
+def power_matrix_jax(mu: jnp.ndarray, power: PowerModel) -> jnp.ndarray:
+    """P_ij = coeff * mu_ij ** alpha on device (paper Sec. 3.2), float32."""
+    mu = jnp.asarray(mu, dtype=jnp.float32)
+    return jnp.float32(power.coeff) * mu ** jnp.float32(power.alpha)
+
+
+def _cols_jax(Ns, M):
+    """Per-column ratio-of-sums sum_i N_ij M_ij / c_j over a batch: the shared
+    shape behind both X_j (M=mu) and the power rate W_j (M=P)."""
+    col = Ns.sum(axis=-2)
+    num = (M * Ns).sum(axis=-2)
+    return jnp.where(col > 0, num / jnp.maximum(col, 1.0), 0.0)
+
+
+def expected_energy_batch_jax(Ns: jnp.ndarray, mus: jnp.ndarray,
+                              Ps: jnp.ndarray) -> jnp.ndarray:
+    """E[E] (eq. 19) for a (B, k, l) batch: sum_j W_j / X_sys per instance
+    (inf where X_sys == 0). mus/Ps broadcast from (k, l)."""
+    Ns = jnp.asarray(Ns, dtype=jnp.float32)
+    mus = jnp.broadcast_to(jnp.asarray(mus, jnp.float32), Ns.shape)
+    Ps = jnp.broadcast_to(jnp.asarray(Ps, jnp.float32), Ns.shape)
+    X = _cols_jax(Ns, mus).sum(axis=-1)
+    W = _cols_jax(Ns, Ps).sum(axis=-1)
+    return jnp.where(X > 0, W / jnp.maximum(X, 1e-30), jnp.inf)
+
+
+def expected_delay_batch_jax(Ns: jnp.ndarray,
+                             mus: jnp.ndarray) -> jnp.ndarray:
+    """E[T] = N_total / X_sys (eq. 20) per batch instance."""
+    Ns = jnp.asarray(Ns, dtype=jnp.float32)
+    mus = jnp.broadcast_to(jnp.asarray(mus, jnp.float32), Ns.shape)
+    X = _cols_jax(Ns, mus).sum(axis=-1)
+    return jnp.where(X > 0, Ns.sum(axis=(-2, -1)) / jnp.maximum(X, 1e-30),
+                     jnp.inf)
+
+
+def edp_batch_jax(Ns: jnp.ndarray, mus: jnp.ndarray,
+                  Ps: jnp.ndarray) -> jnp.ndarray:
+    """EDP = E[E] * E[T] = N_total * sum_j W_j / X_sys^2 (eq. 21), batched."""
+    return (expected_energy_batch_jax(Ns, mus, Ps)
+            * expected_delay_batch_jax(Ns, mus))
 
 
 def scenario_identities(N: np.ndarray, mu: np.ndarray) -> dict:

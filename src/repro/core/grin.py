@@ -337,9 +337,12 @@ def grin_x_sys_jax(mu: jnp.ndarray, n_tasks: jnp.ndarray) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("n_sizes", "max_moves",
-                                             "use_kernel"))
-def _grin_block_core(mus, mixes, n_sizes, max_moves, use_kernel):
-    from repro.kernels.grin_moves import block_move_scores
+                                             "use_kernel", "objective"))
+def _grin_block_core(mus, mixes, Ps, n_sizes, max_moves, use_kernel,
+                     objective):
+    from repro.core.energy import edp_batch_jax, expected_energy_batch_jax
+    from repro.kernels.grin_moves import (OBJ_E_GUARD, OBJ_EDP, OBJ_X,
+                                          OBJ_XE, block_move_scores)
     B, k, l = mus.shape
     # Largest size first: argmax ties prefer the biggest improving block.
     sizes = jnp.float32(2) ** jnp.arange(n_sizes - 1, -1, -1)
@@ -347,36 +350,68 @@ def _grin_block_core(mus, mixes, n_sizes, max_moves, use_kernel):
     cap = (jnp.int32(max_moves) if max_moves is not None
            else mixes.sum(axis=1).max().astype(jnp.int32) + 64)
 
-    def body(state):
-        N, active, moves, it = state
-        _, bi, bg, base = block_move_scores(N, mus, sizes,
-                                            use_kernel=use_kernel,
-                                            return_gains=False)
-        mi, p, s, d = jnp.unravel_index(bi, (n_sizes, k, l, l))
-        m = sizes[mi]                                        # (B,)
-        # Convergence is the m=1 signal: exhausted => single-move local max.
-        x = jax.vmap(system_throughput_jax)(N, mus)
-        do = active & (base > _TOL32_BLOCK * (1.0 + x))
-        upd = (m[:, None, None]
-               * jax.nn.one_hot(p, k)[:, :, None]
-               * (jax.nn.one_hot(d, l) - jax.nn.one_hot(s, l))[:, None, :])
-        N = jnp.where(do[:, None, None], N + upd, N)
-        return N, do, moves + do.astype(jnp.int32), it + 1
+    def scale_for(N, obj):
+        """Per-instance objective magnitude the float32 noise threshold is
+        relative to: X_sys for throughput objectives, E / EDP for energy."""
+        if obj in (OBJ_X, OBJ_XE):
+            return jax.vmap(system_throughput_jax)(N, mus)
+        if obj == OBJ_EDP:
+            return jnp.abs(edp_batch_jax(N, mus, Ps))
+        return jnp.abs(expected_energy_batch_jax(N, mus, Ps))
 
-    def cond(state):
-        _, active, _, it = state
-        return jnp.any(active) & (it < cap)
+    def run_phase(N0_, moves0, obj):
+        def body(state):
+            N, active, moves, it = state
+            _, bi, bg, base = block_move_scores(N, mus, sizes,
+                                                use_kernel=use_kernel,
+                                                return_gains=False,
+                                                P=Ps, objective=obj)
+            mi, p, s, d = jnp.unravel_index(bi, (n_sizes, k, l, l))
+            m = sizes[mi]                                    # (B,)
+            # Convergence is the m=1 signal: exhausted => single-move
+            # local optimum of the phase objective.
+            do = active & (base > _TOL32_BLOCK * (1.0 + scale_for(N, obj)))
+            upd = (m[:, None, None]
+                   * jax.nn.one_hot(p, k)[:, :, None]
+                   * (jax.nn.one_hot(d, l)
+                      - jax.nn.one_hot(s, l))[:, None, :])
+            N = jnp.where(do[:, None, None], N + upd, N)
+            return N, do, moves + do.astype(jnp.int32), it + 1
 
-    N, active, moves, _ = jax.lax.while_loop(
-        cond, body, (N0, jnp.ones(B, bool), jnp.zeros(B, jnp.int32),
-                     jnp.int32(0)))
+        def cond(state):
+            _, active, _, it = state
+            return jnp.any(active) & (it < cap)
+
+        N, active, moves, _ = jax.lax.while_loop(
+            cond, body, (N0_, jnp.ones(B, bool), moves0, jnp.int32(0)))
+        return N, moves, ~active
+
+    N, moves, conv = run_phase(N0, jnp.zeros(B, jnp.int32), objective)
+    if objective == OBJ_XE:
+        # Phase 2 of max-X-E: slide along the X plateau (moves whose dX
+        # stays within float32 noise of zero) toward lower energy.
+        N, moves, conv2 = run_phase(N, moves, OBJ_E_GUARD)
+        conv = conv & conv2
     xs = jax.vmap(system_throughput_jax)(N, mus)
-    return N, xs, ~active, moves
+    return N, xs, conv, moves
+
+
+_OBJECTIVE_KEYS = ("max-x", "max-x-e", "min-e", "min-edp")
+
+
+def _objective_id(objective: str) -> int:
+    from repro.kernels.grin_moves import OBJ_E, OBJ_EDP, OBJ_X, OBJ_XE
+    ids = dict(zip(_OBJECTIVE_KEYS, (OBJ_X, OBJ_XE, OBJ_E, OBJ_EDP)))
+    if objective not in ids:
+        raise ValueError(f"unknown objective {objective!r}: "
+                         + " | ".join(_OBJECTIVE_KEYS))
+    return ids[objective]
 
 
 def grin_solve_batch_jax(mu, n_tasks_batch, *, n_sizes: int | None = None,
                          max_moves: int | None = None,
-                         use_kernel: bool | None = None):
+                         use_kernel: bool | None = None,
+                         objective: str = "max-x", power=None):
     """Block-move GrIn over a batch of instances, in one device call.
 
     mu: (k, l) shared or (B, k, l) per-instance affinities; n_tasks_batch:
@@ -387,6 +422,16 @@ def grin_solve_batch_jax(mu, n_tasks_batch, *, n_sizes: int | None = None,
     convergence needs O(log N)-ish moves, so hitting the cap (converged
     False) signals a degenerate instance rather than a small budget.
     `use_kernel` picks the Pallas scoring kernel (None: TPU/interpret auto).
+
+    `objective` selects what moves are ranked by (paper Sec. 3.4 /
+    arXiv:1607.07763 multi-objective framing), with the power matrix
+    P = coeff * mu**alpha from `power` (a PowerModel; default proportional):
+
+      "max-x"   — throughput ascent (the original solver, default)
+      "max-x-e" — throughput ascent with energy tie-breaks, then an
+                  X-plateau energy polish (GrIn-E)
+      "min-e"   — E[E] descent (eq. 19)
+      "min-edp" — EDP descent (eq. 21)
     """
     mixes = jnp.asarray(n_tasks_batch, dtype=jnp.float32)
     mus = jnp.asarray(mu, dtype=jnp.float32)
@@ -398,10 +443,18 @@ def grin_solve_batch_jax(mu, n_tasks_batch, *, n_sizes: int | None = None,
     if mus.ndim != 3 or mus.shape[:2] != (B, k):
         raise ValueError(f"mu must be (k={k}, l) or (B={B}, k={k}, l); got "
                          f"{tuple(jnp.shape(mu))}")
+    obj = _objective_id(objective)
+    from repro.kernels.grin_moves import OBJ_X
+    if obj == OBJ_X:
+        Ps = mus            # unused by the throughput objective
+    else:
+        from repro.core.affinity import PROPORTIONAL_POWER
+        from repro.core.energy import power_matrix_jax
+        Ps = power_matrix_jax(mus, power or PROPORTIONAL_POWER)
     if n_sizes is None:
         n_sizes = len(_ladder(int(np.asarray(n_tasks_batch).sum(axis=1).max())))
     if use_kernel is None:
         from repro.kernels.grin_moves import _interpret, _use_pallas
         use_kernel = _use_pallas() or _interpret()
-    return _grin_block_core(mus, mixes, int(n_sizes), max_moves,
-                            bool(use_kernel))
+    return _grin_block_core(mus, mixes, Ps, int(n_sizes), max_moves,
+                            bool(use_kernel), obj)

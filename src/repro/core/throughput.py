@@ -161,3 +161,81 @@ def delta_x_remove_block(N: np.ndarray, mu: np.ndarray, p: int,
         else:
             out[j] = m * (X[j] - mu[p, j]) / (col[j] - m)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Energy deltas (paper Sec. 3.4). The per-column POWER RATE
+#
+#     W_j = sum_i N[i, j] * P[i, j] / c_j           (0 if column empty)
+#
+# has exactly the same ratio-of-sums structure as X_j with P in place of mu,
+# so the block closed forms above apply verbatim; E[E] = sum_j W_j / X_sys
+# (eq. 19) and EDP = E[E] * N_total / X_sys (eq. 20-21) then give EXACT
+# per-move deltas for the energy objectives — the host mirror of what the
+# grin_moves kernel scores on device.
+# ---------------------------------------------------------------------------
+
+def power_rate_columns(N: np.ndarray, P: np.ndarray) -> np.ndarray:
+    """Per-processor power rate W_j (empty columns contribute 0)."""
+    return column_throughputs(N, P)
+
+
+def delta_w_add_block(N: np.ndarray, P: np.ndarray, p: int,
+                      m: int) -> np.ndarray:
+    """Exact W_j change from ADDING m p-type tasks: m*(P_pj - W_j)/(c_j + m)
+    — `delta_x_add_block` with the power matrix in mu's seat."""
+    return delta_x_add_block(N, P, p, m)
+
+
+def delta_w_remove_block(N: np.ndarray, P: np.ndarray, p: int,
+                         m: int) -> np.ndarray:
+    """Exact W_j change from REMOVING m p-type tasks (same structure as
+    `delta_x_remove_block`; +inf where infeasible)."""
+    return delta_x_remove_block(N, P, p, m)
+
+
+def delta_energy_move_block(N: np.ndarray, mu: np.ndarray, P: np.ndarray,
+                            p: int, src: int, dst: int, m: int) -> float:
+    """Exact E[E] change from moving m p-type tasks src -> dst (src != dst).
+
+    E = W_sum / X with W_sum = sum_j W_j, so with the block deltas
+    dX = dX-[src] + dX+[dst] and dW = dW-[src] + dW+[dst],
+
+        dE = (W_sum + dW) / (X + dX) - W_sum / X
+
+    (+inf when the move is infeasible or drains the system, X + dX <= 0).
+    """
+    N = np.asarray(N, dtype=np.float64)
+    if src == dst or N[p, src] < m:
+        return np.inf
+    X = system_throughput(N, mu)
+    W = float(power_rate_columns(N, P).sum())
+    dx = (delta_x_remove_block(N, mu, p, m)[src]
+          + delta_x_add_block(N, mu, p, m)[dst])
+    dw = (delta_w_remove_block(N, P, p, m)[src]
+          + delta_w_add_block(N, P, p, m)[dst])
+    if X + dx <= 0 or X <= 0:
+        return np.inf
+    return (W + dw) / (X + dx) - W / X
+
+
+def delta_edp_move_block(N: np.ndarray, mu: np.ndarray, P: np.ndarray,
+                         p: int, src: int, dst: int, m: int) -> float:
+    """Exact EDP change from moving m p-type tasks src -> dst.
+
+    EDP = E * E[T] = N_total * W_sum / X^2 (Little's law), so the move's
+    closed-form delta is N_total * ((W+dW)/(X+dX)^2 - W/X^2).
+    """
+    N = np.asarray(N, dtype=np.float64)
+    if src == dst or N[p, src] < m:
+        return np.inf
+    X = system_throughput(N, mu)
+    W = float(power_rate_columns(N, P).sum())
+    dx = (delta_x_remove_block(N, mu, p, m)[src]
+          + delta_x_add_block(N, mu, p, m)[dst])
+    dw = (delta_w_remove_block(N, P, p, m)[src]
+          + delta_w_add_block(N, P, p, m)[dst])
+    if X + dx <= 0 or X <= 0:
+        return np.inf
+    ntot = float(N.sum())
+    return ntot * ((W + dw) / (X + dx) ** 2 - W / X ** 2)

@@ -51,6 +51,20 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) \
 
 _NEG = -jnp.inf
 
+# Objectives the scorer can rank moves under (trace-time statics). OBJ_X is
+# the original throughput objective (bit-compatible path); the energy
+# objectives additionally take the power matrix P:
+#   OBJ_XE      — gains are still dX, but near-tied directions (within
+#                 _XE_TIE float32 resolution) break toward the larger energy
+#                 drop: "max-X subject to energy" move selection.
+#   OBJ_E       — gains are E[E] drops (eq. 19): min-energy descent.
+#   OBJ_EDP     — gains are EDP drops (eq. 21): min-EDP descent.
+#   OBJ_E_GUARD — E drops restricted to moves whose dX stays within the
+#                 _XE_TIE band of zero: the X-plateau energy polish that
+#                 follows an OBJ_XE solve (grin-e phase 2).
+OBJ_X, OBJ_XE, OBJ_E, OBJ_EDP, OBJ_E_GUARD = 0, 1, 2, 3, 4
+_XE_TIE = 4e-6          # float32 near-tie band, matches grin._TOL32
+
 
 def _use_pallas() -> bool:
     return jax.default_backend() == "tpu"
@@ -81,7 +95,63 @@ def _gains_body(N, mu, sizes):
     return jnp.where(eye, _NEG, gain)
 
 
-def _select_body(gain):
+def _energy_gains_body(N, mu, P, sizes, objective):
+    """Energy-aware gain scoring: (gain (B, M, k, l, l), tie | None).
+
+    The per-column power rate W_j = sum_i N_ij P_ij / c_j has the same
+    ratio-of-sums shape as X_j, so the block closed forms apply with P in
+    mu's seat; with dX and dW pairwise tensors the exact objective deltas are
+
+        dE   = (W + dW) / (X + dX) - W / X                      (eq. 19)
+        dEDP = ntot * ((W + dW) / (X + dX)^2 - W / X^2)         (eq. 21)
+
+    and gains are the NEGATED deltas (drops — bigger is better). Infeasible
+    moves (src short of m tasks, s == d, or a move that drains the system)
+    score -inf. MUST stay op-identical between the jnp reference and the
+    Pallas kernel body — bit-exact parity is an acceptance criterion."""
+    l = N.shape[-1]
+    colsum = N.sum(axis=-2)                              # (B, l)
+    wx = (mu * N).sum(axis=-2)
+    wp = (P * N).sum(axis=-2)
+    X = jnp.where(colsum > 0, wx / jnp.maximum(colsum, 1.0), 0.0)
+    W = jnp.where(colsum > 0, wp / jnp.maximum(colsum, 1.0), 0.0)
+    Xs = X.sum(-1)[:, None, None, None, None]            # (B, 1, 1, 1, 1)
+    Ws = W.sum(-1)[:, None, None, None, None]
+    ntot = colsum.sum(-1)[:, None, None, None, None]
+    m = sizes[None, :, None, None]                       # (1, M, 1, 1)
+    cb = colsum[:, None, None, :]                        # (B, 1, 1, l)
+
+    def add_rem(Mb, Sb):
+        add = m * (Mb - Sb) / (cb + m)
+        rem = jnp.where(cb - m > 0.5,
+                        m * (Sb - Mb) / jnp.maximum(cb - m, 1.0), -Sb)
+        return add, rem
+
+    addx, remx = add_rem(mu[:, None, :, :], X[:, None, None, :])
+    addw, remw = add_rem(P[:, None, :, :], W[:, None, None, :])
+    dX = remx[..., :, None] + addx[..., None, :]         # (B, M, k, l, l)
+    dW = remw[..., :, None] + addw[..., None, :]
+    eye = jnp.eye(l, dtype=bool)[None, None, None]
+    feas = (N[:, None, :, :] >= m)[..., :, None] & ~eye
+    X1 = Xs + dX
+    ok = feas & (X1 > 0) & (Xs > 0)
+    e_drop = jnp.where(ok, Ws / jnp.maximum(Xs, 1e-30)
+                       - (Ws + dW) / jnp.maximum(X1, 1e-30), _NEG)
+    if objective == OBJ_XE:
+        return jnp.where(feas, dX, _NEG), e_drop
+    if objective == OBJ_E:
+        return e_drop, None
+    if objective == OBJ_EDP:
+        return jnp.where(ok, ntot * (Ws / jnp.maximum(Xs * Xs, 1e-30)
+                                     - (Ws + dW)
+                                     / jnp.maximum(X1 * X1, 1e-30)), _NEG), \
+            None
+    if objective == OBJ_E_GUARD:
+        return jnp.where(dX >= -_XE_TIE * (1.0 + Xs), e_drop, _NEG), None
+    raise ValueError(f"unknown objective {objective!r}")
+
+
+def _select_body(gain, tie=None):
     """Shared move selection on a (B, M, k, l, l) gain tensor whose sizes
     axis is the DESCENDING doubling ladder (2^(M-1), ..., 2, 1). Returns
     (best_idx, best_gain, base_gain).
@@ -95,12 +165,22 @@ def _select_body(gain):
     block whose marginals dip below the runner-up would overshoot into a
     different basin (e.g. draining a whole column into a marginally faster
     one when spreading is optimal). base_gain is the m=1 steepest gain —
-    the convergence signal."""
+    the convergence signal.
+
+    With a `tie` tensor (same shape; OBJ_XE) the direction is instead the
+    best TIE score among directions whose m=1 gain sits within the _XE_TIE
+    float32 band of the steepest — max-X move selection with energy-drop
+    tie-breaking. base_gain stays the steepest m=1 gain either way."""
     b, msz = gain.shape[:2]
     dirs = gain.shape[2] * gain.shape[3] * gain.shape[4]
     g1 = gain[:, -1].reshape(b, dirs)                    # m=1 slice
-    d1 = jnp.argmax(g1, axis=1)
     base = jnp.max(g1, axis=1)
+    if tie is None:
+        d1 = jnp.argmax(g1, axis=1)
+    else:
+        near = g1 >= (base - _XE_TIE * (1.0 + jnp.abs(base)))[:, None]
+        d1 = jnp.argmax(jnp.where(near, tie[:, -1].reshape(b, dirs), _NEG),
+                        axis=1)
     runner = jnp.max(jnp.where(
         jax.nn.one_hot(d1, dirs, dtype=bool), _NEG, g1), axis=1)
     thresh = jnp.maximum(runner, 0.0)
@@ -148,16 +228,42 @@ def _kernel_select(n_ref, mu_ref, sz_ref, bi_ref, bg_ref, b1_ref):
     b1_ref[...] = base[:, None]
 
 
+def _kernel_obj(objective, n_ref, mu_ref, p_ref, sz_ref, g_ref, bi_ref,
+                bg_ref, b1_ref):
+    """Energy-objective kernel: same structure as `_kernel` plus the power
+    matrix input; `objective` is bound trace-time via functools.partial."""
+    gain, tie = _energy_gains_body(n_ref[...], mu_ref[...], p_ref[...],
+                                   sz_ref[...], objective)
+    g_ref[...] = gain.reshape(gain.shape[0], -1)
+    bi, bg, base = _select_body(gain, tie)
+    bi_ref[...] = bi[:, None]
+    bg_ref[...] = bg[:, None]
+    b1_ref[...] = base[:, None]
+
+
+def _kernel_select_obj(objective, n_ref, mu_ref, p_ref, sz_ref, bi_ref,
+                       bg_ref, b1_ref):
+    gain, tie = _energy_gains_body(n_ref[...], mu_ref[...], p_ref[...],
+                                   sz_ref[...], objective)
+    bi, bg, base = _select_body(gain, tie)
+    bi_ref[...] = bi[:, None]
+    bg_ref[...] = bg[:, None]
+    b1_ref[...] = base[:, None]
+
+
 def block_move_gains_pallas(N, mu, sizes, *, block_b: int = 8,
                             interpret: bool = False,
-                            return_gains: bool = True):
+                            return_gains: bool = True,
+                            P=None, objective: int = OBJ_X):
     """Pallas path: grid over B-tiles; returns (gains (B, F) | None,
     best_idx, best_gain, base_gain).
 
     B is padded up to a block multiple with empty states (colsum 0 -> every
     move infeasible, gains all -inf) and the pad is sliced away. With
     `return_gains=False` the gains tensor is never written — the solver
-    loop only consumes the selection.
+    loop only consumes the selection. Energy objectives (OBJ_XE/E/EDP/
+    E_GUARD) additionally stream the power matrix P through VMEM; OBJ_X
+    keeps the original two-input kernel (identical compiled program).
     """
     N = jnp.asarray(N, jnp.float32)
     mu = jnp.asarray(mu, jnp.float32)
@@ -167,9 +273,15 @@ def block_move_gains_pallas(N, mu, sizes, *, block_b: int = 8,
     f = msz * k * l * l
     bt = min(block_b, b)
     pad = (-b) % bt
+    if objective != OBJ_X:
+        if P is None:
+            raise ValueError("energy objectives need the power matrix P")
+        P = jnp.broadcast_to(jnp.asarray(P, jnp.float32), N.shape)
     if pad:
         N = jnp.pad(N, ((0, pad), (0, 0), (0, 0)))
         mu = jnp.pad(mu, ((0, pad), (0, 0), (0, 0)))
+        if objective != OBJ_X:
+            P = jnp.pad(P, ((0, pad), (0, 0), (0, 0)))
     bp = b + pad
     sel_specs = [pl.BlockSpec((bt, 1), lambda i: (i, 0))] * 3
     sel_shapes = [jax.ShapeDtypeStruct((bp, 1), jnp.int32),
@@ -178,29 +290,37 @@ def block_move_gains_pallas(N, mu, sizes, *, block_b: int = 8,
     if return_gains:
         gains_spec = [pl.BlockSpec((bt, f), lambda i: (i, 0))]
         gains_shape = [jax.ShapeDtypeStruct((bp, f), jnp.float32)]
-        kernel = _kernel
+        kernel = (_kernel if objective == OBJ_X
+                  else functools.partial(_kernel_obj, objective))
     else:
-        gains_spec, gains_shape, kernel = [], [], _kernel_select
+        gains_spec, gains_shape = [], []
+        kernel = (_kernel_select if objective == OBJ_X
+                  else functools.partial(_kernel_select_obj, objective))
+    kl_spec = pl.BlockSpec((bt, k, l), lambda i: (i, 0, 0))
+    in_specs = [kl_spec, kl_spec]
+    inputs = [N, mu]
+    if objective != OBJ_X:
+        in_specs.append(kl_spec)
+        inputs.append(P)
+    in_specs.append(pl.BlockSpec((msz,), lambda i: (0,)))
+    inputs.append(sizes)
     out = pl.pallas_call(
         kernel,
         grid=(bp // bt,),
-        in_specs=[
-            pl.BlockSpec((bt, k, l), lambda i: (i, 0, 0)),
-            pl.BlockSpec((bt, k, l), lambda i: (i, 0, 0)),
-            pl.BlockSpec((msz,), lambda i: (0,)),
-        ],
+        in_specs=in_specs,
         out_specs=gains_spec + sel_specs,
         out_shape=gains_shape + sel_shapes,
         compiler_params=_CompilerParams(dimension_semantics=("arbitrary",)),
         interpret=interpret,
-    )(N, mu, sizes)
+    )(*inputs)
     gains = out[0][:b] if return_gains else None
     bi, bg, base = out[-3:]
     return gains, bi[:b, 0], bg[:b, 0], base[:b, 0]
 
 
 def block_move_scores(N, mu, sizes, *, use_kernel: bool | None = None,
-                      return_gains: bool = True):
+                      return_gains: bool = True,
+                      P=None, objective: int = OBJ_X):
     """Score every (block size, type, src, dst) move for a batch of states
     and select the next move per instance.
 
@@ -209,18 +329,28 @@ def block_move_scores(N, mu, sizes, *, use_kernel: bool | None = None,
     base_gain (B,)): best_idx indexes the flattened (M, k, l, l) tensor at
     the selected move (steepest m=1 direction, run-length-guarded block size
     along it) and base_gain is the steepest m=1 gain — the convergence
-    signal. `return_gains=False` skips materializing the gains tensor (the
-    solver's hot loop). `use_kernel=None` picks the Pallas kernel on TPU (or
-    under REPRO_PALLAS_INTERPRET=1) and the jnp reference elsewhere; both
-    produce bit-identical outputs.
+    signal. `objective` switches what the gains measure (throughput, energy
+    drop, EDP drop, or throughput with energy tie-breaks — see the OBJ_*
+    constants); all energy objectives need `P`. `return_gains=False` skips
+    materializing the gains tensor (the solver's hot loop). `use_kernel=None`
+    picks the Pallas kernel on TPU (or under REPRO_PALLAS_INTERPRET=1) and
+    the jnp reference elsewhere; both produce bit-identical outputs.
     """
     if use_kernel is None:
         use_kernel = _use_pallas() or _interpret()
     if use_kernel:
         return block_move_gains_pallas(
             N, mu, sizes, interpret=_interpret() or not _use_pallas(),
-            return_gains=return_gains)
-    gains = block_move_gains_ref(N, mu, sizes)
-    bi, bg, base = _select_body(gains)
+            return_gains=return_gains, P=P, objective=objective)
+    if objective == OBJ_X:
+        gains, tie = block_move_gains_ref(N, mu, sizes), None
+    else:
+        if P is None:
+            raise ValueError("energy objectives need the power matrix P")
+        gains, tie = _energy_gains_body(
+            jnp.asarray(N, jnp.float32), jnp.asarray(mu, jnp.float32),
+            jnp.broadcast_to(jnp.asarray(P, jnp.float32), jnp.shape(N)),
+            jnp.asarray(sizes, jnp.float32), objective)
+    bi, bg, base = _select_body(gains, tie)
     return (gains.reshape(gains.shape[0], -1) if return_gains else None,
             bi, bg, base)

@@ -22,7 +22,8 @@ Policies are constructed through a string registry:
     >>> j = core.route(task_type)            # largest-deficit dispatch
     >>> core.complete(task_type, j, service_s=dt)   # EWMA rate feedback
     >>> available_policies()
-    ('bf', 'cab', 'fixed', 'grin', 'grin+', 'jsq', 'lb', 'opt', 'rd', 'slsqp')
+    ('bf', 'cab', 'cab-e', 'fixed', 'grin', 'grin+', 'grin-e', 'grin-edp',
+     'jsq', 'lb', 'opt', 'rd', 'slsqp')
 
 `solve_targets_jax` batches target re-solves over many type-mixes on device
 (block-move GrIn; `solver="single"` keeps the one-move-per-step variant) and
@@ -40,13 +41,17 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.affinity import PROPORTIONAL_POWER, PowerModel
 from repro.core.cab import cab_target_state
+from repro.core.energy import expected_energy_batch_jax
 from repro.core.exhaustive import exhaustive_solve
 from repro.core.grin import grin_solve, grin_solve_batch_jax, grin_solve_jax
+from repro.core.grin_energy import grin_energy_solve
 from repro.core.grin_plus import grin_multistart_solve
 from repro.core.slsqp import round_largest_remainder, slsqp_solve
-from repro.core.throughput import (system_throughput_batch_jax,
-                                   system_throughput_jax)
+from repro.core.throughput import (state_from_pair,
+                                   system_throughput_batch_jax,
+                                   system_throughput_jax, throughput_map_2x2)
 from repro.train.fault_tolerance import StragglerTracker
 
 
@@ -76,6 +81,12 @@ class Policy:
                            rounds; the flag records the relaxation).
       supports_jax_batch — `solve_targets_jax` can batch this policy's
                            re-solves on device.
+      jax_objective      — the objective the batched device solver ranks
+                           moves under for this policy ("max-x" | "max-x-e" |
+                           "min-e" | "min-edp").
+      power              — PowerModel the energy objectives score against
+                           (None: throughput-only policy; energy what-ifs
+                           default to proportional power).
     """
 
     name = "base"
@@ -84,6 +95,8 @@ class Policy:
     pool_limit: int | None = None
     integer_target = True
     supports_jax_batch = False
+    jax_objective = "max-x"
+    power: PowerModel | None = None
 
     def solve_target(self, mu: np.ndarray, n_tasks: np.ndarray) -> np.ndarray:
         """Return the (k, l) target placement N* for the given type mix."""
@@ -166,6 +179,66 @@ class GrInPlusPolicy(Policy):
 
     def solve_target(self, mu, n_tasks):
         return grin_multistart_solve(mu, n_tasks).N
+
+
+@register_policy("grin-e", "grine", "grin_e")
+class GrInEPolicy(Policy):
+    """GrIn-E: maximize throughput, break move ties toward lower E[E], then
+    polish along the X plateau (paper Sec. 3.4 objectives; the host solver
+    is `grin_energy_solve`, the batched device path objective='max-x-e')."""
+
+    name = "GrIn-E"
+    supports_jax_batch = True
+    jax_objective = "max-x-e"
+
+    def __init__(self, power: PowerModel = PROPORTIONAL_POWER):
+        self.power = power
+
+    def solve_target(self, mu, n_tasks):
+        return grin_energy_solve(mu, n_tasks, self.power, "max-x-e").N
+
+
+@register_policy("grin-edp", "grinedp", "grin_edp")
+class GrInEDPPolicy(Policy):
+    """GrIn-EDP: greedy Energy-Delay-Product descent (eq. 21)."""
+
+    name = "GrIn-EDP"
+    supports_jax_batch = True
+    jax_objective = "min-edp"
+
+    def __init__(self, power: PowerModel = PROPORTIONAL_POWER):
+        self.power = power
+
+    def solve_target(self, mu, n_tasks):
+        return grin_energy_solve(mu, n_tasks, self.power, "min-edp").N
+
+
+@register_policy("cab-e", "cabe", "cab_e")
+class CABEnergyPolicy(Policy):
+    """CAB-E: the two-pool Table-1 optimum with an energy tie-break — the
+    minimum-E[E] state among all (N11, N22) states whose throughput matches
+    the CAB maximum (within float32 map resolution). Identical to CAB when
+    the optimum is unique; on the non-affinity cases (whole families of
+    optimal states) it picks the most energy-efficient member."""
+
+    name = "CAB-E"
+    pool_limit = 2
+
+    def __init__(self, power: PowerModel = PROPORTIONAL_POWER):
+        self.power = power
+
+    def solve_target(self, mu, n_tasks):
+        if mu.shape[1] != 2:
+            raise ValueError("CAB-E is the two-pool analytical solution; got "
+                             f"{mu.shape[1]} pools (use 'grin-e')")
+        n1, n2 = int(n_tasks[0]), int(n_tasks[1])
+        xmap = throughput_map_2x2(n1, n2, mu)            # (n1+1, n2+1)
+        states = np.stack([state_from_pair(i, j, n1, n2)
+                           for i in range(n1 + 1) for j in range(n2 + 1)])
+        E = np.asarray(expected_energy_batch_jax(
+            states, mu, self.power.power_matrix(mu)), dtype=np.float64)
+        near = xmap.ravel() >= xmap.max() * (1.0 - 1e-6)
+        return states[np.flatnonzero(near)[np.argmin(E[near])]]
 
 
 @register_policy("slsqp")
@@ -288,7 +361,9 @@ def _repair_targets(raw: np.ndarray, mixes: np.ndarray) -> np.ndarray:
     return np.maximum(out, 0)
 
 
-def solve_targets_jax(mu, n_tasks_batch, solver: str = "block"):
+def solve_targets_jax(mu, n_tasks_batch, solver: str = "block",
+                      objective: str = "max-x",
+                      power: PowerModel | None = None):
     """Batched GrIn re-solve over many type mixes, vectorized on device.
 
     Returns (targets (B, k, l) int64, x_sys (B,) float), with row sums
@@ -300,7 +375,9 @@ def solve_targets_jax(mu, n_tasks_batch, solver: str = "block"):
     steps per solve; `solver="single"` keeps the one-move-per-step variant
     (the PR 2 path, retained as the benchmark baseline). Both reach local
     maxima of the same objective and may land in a different (same-quality-
-    class) basin than the host sweep solver.
+    class) basin than the host sweep solver. `objective`/`power` switch the
+    block solver to the energy objectives (GrIn-E/GrIn-EDP); the single-move
+    solver is throughput-only.
     """
     mu = jnp.asarray(mu, dtype=jnp.float32)
     mixes_np = np.asarray(n_tasks_batch)
@@ -309,15 +386,21 @@ def solve_targets_jax(mu, n_tasks_batch, solver: str = "block"):
         raise ValueError(f"n_tasks_batch must be (B, k={mu.shape[0]}); got "
                          f"{tuple(mixes.shape)}")
     if solver == "block":
-        targets, xs, _, _ = grin_solve_batch_jax(mu, mixes_np)
+        targets, xs, _, _ = grin_solve_batch_jax(mu, mixes_np,
+                                                 objective=objective,
+                                                 power=power)
     elif solver == "single":
+        if objective != "max-x":
+            raise ValueError("energy objectives need solver='block'")
         targets, xs = _solve_targets_single_jax(mu, mixes)
     else:
         raise ValueError(f"unknown solver {solver!r}: block | single")
     return _repair_targets(np.asarray(targets), mixes_np), np.asarray(xs)
 
 
-def solve_targets_grid_jax(mus, mixes, solver: str = "block"):
+def solve_targets_grid_jax(mus, mixes, solver: str = "block",
+                           objective: str = "max-x",
+                           power: PowerModel | None = None):
     """Whole (mu x mix) target grid in one device call.
 
     mus: (G, k, l) affinity matrices; mixes: (M, k) type mixes. Returns
@@ -326,6 +409,7 @@ def solve_targets_grid_jax(mus, mixes, solver: str = "block"):
     whole grid costs one compiled while-loop whose depth is the slowest
     instance's block-move count. This is what makes thousand-point elastic /
     energy what-if sweeps (mu batching) cheap enough to run interactively.
+    `objective`/`power` switch the block solver to the energy objectives.
     """
     mus = np.asarray(mus, dtype=np.float64)
     mixes = np.asarray(mixes, dtype=np.int64)
@@ -337,9 +421,13 @@ def solve_targets_grid_jax(mus, mixes, solver: str = "block"):
     mu_b = np.repeat(mus, M, axis=0)                    # (G*M, k, l)
     mix_b = np.tile(mixes, (G, 1))                      # (G*M, k)
     if solver == "block":
-        raw, xs, conv, _ = grin_solve_batch_jax(mu_b, mix_b)
+        raw, xs, conv, _ = grin_solve_batch_jax(mu_b, mix_b,
+                                                objective=objective,
+                                                power=power)
         conv = np.asarray(conv).reshape(G, M)
     elif solver == "single":
+        if objective != "max-x":
+            raise ValueError("energy objectives need solver='block'")
         raw, xs, conv = _solve_targets_single_grid(
             jnp.asarray(mu_b, jnp.float32), jnp.asarray(mix_b, jnp.float32))
         conv = np.asarray(conv).reshape(G, M)
@@ -540,7 +628,9 @@ class SchedulerCore:
         vs a cold core matters."""
         mixes = np.asarray(mixes, dtype=np.int64)
         if self.policy.supports_jax_batch and self.policy.needs_target:
-            targets, _ = solve_targets_jax(self.mu, mixes)
+            targets, _ = solve_targets_jax(
+                self.mu, mixes, objective=self.policy.jax_objective,
+                power=self.policy.power)
             added = 0
             for mix, N in zip(mixes, targets):
                 key = (tuple(int(x) for x in mix), self._mu_token)
@@ -555,19 +645,23 @@ class SchedulerCore:
         return self.resolves - before
 
     def elastic_what_if(self, mixes=None, *, added_columns=None,
-                        warm: bool = True) -> dict:
-        """Elastic planning grids: X_sys for the current topology, for every
-        single-pool loss, and for each candidate added pool — each topology
-        group solved as one `solve_targets_grid_jax` device call.
+                        warm: bool = True,
+                        power: PowerModel | None = None) -> dict:
+        """Elastic planning grids: X_sys AND energy/EDP for the current
+        topology, for every single-pool loss, and for each candidate added
+        pool — each topology group solved as one `solve_targets_grid_jax`
+        device call and priced under `power` (default: the policy's power
+        model, else proportional).
 
         mixes: (M, k) type mixes (default: the pinned mix); added_columns:
         (A, k) candidate mu columns for `pool_added`. Returns
         {"base": (M,), "pool_lost": (l, M), "pool_added": (A, M)} of X_sys
-        values, answering "what does losing pool j / adding this pool do to
-        achievable throughput across these mixes" without touching live
-        state. With `warm=True` the base-topology targets are inserted into
-        the target cache, so routing on any of the mixes after a
-        `notify_type_counts` is already warm.
+        values plus matching "*_energy" (E[E] per task, eq. 19) and "*_edp"
+        (eq. 21) grids, answering "what does losing pool j / adding this
+        pool do to achievable throughput and energy across these mixes"
+        without touching live state. With `warm=True` the base-topology
+        targets are inserted into the target cache, so routing on any of
+        the mixes after a `notify_type_counts` is already warm.
         """
         if not self.policy.needs_target:
             raise ValueError(f"{self.policy.name} routes statelessly; "
@@ -577,39 +671,60 @@ class SchedulerCore:
                 raise ValueError("no mixes given and no pinned type mix")
             mixes = self._mix[None]
         mixes = np.asarray(mixes, dtype=np.int64)
+        power = power or self.policy.power or PROPORTIONAL_POWER
+        ntot = mixes.sum(axis=1).astype(np.float64)     # (M,)
 
         def grid(mus: np.ndarray):
             if self.policy.supports_jax_batch:
-                targets, xs, _ = solve_targets_grid_jax(mus, mixes)
-                return targets, xs
-            from repro.core.throughput import system_throughput
-            targets = np.stack([
-                np.stack([np.asarray(self.policy.solve_target(m, mix))
-                          for mix in mixes]) for m in mus])
-            xs = np.array([[system_throughput(N, m)
-                            for N in row] for m, row in zip(mus, targets)])
-            return targets, xs
+                targets, xs, _ = solve_targets_grid_jax(
+                    mus, mixes, objective=self.policy.jax_objective,
+                    power=self.policy.power)
+            else:
+                from repro.core.throughput import system_throughput
+                targets = np.stack([
+                    np.stack([np.asarray(self.policy.solve_target(m, mix))
+                              for mix in mixes]) for m in mus])
+                xs = np.array([[system_throughput(N, m)
+                                for N in row] for m, row in zip(mus, targets)])
+            G, M = xs.shape
+            energy = np.asarray(expected_energy_batch_jax(
+                targets.reshape((G * M,) + targets.shape[2:]),
+                np.repeat(mus, M, axis=0),
+                np.repeat(np.stack([power.power_matrix(m) for m in mus]),
+                          M, axis=0)), dtype=np.float64).reshape(G, M)
+            with np.errstate(divide="ignore"):
+                edp = energy * np.where(xs > 0, ntot[None, :] / xs, np.inf)
+            return targets, xs, energy, edp
 
-        base_targets, base_xs = grid(self.mu[None])
+        base_targets, base_xs, base_e, base_edp = grid(self.mu[None])
         if warm:
             for mix, N in zip(mixes, base_targets[0]):
                 key = (tuple(int(x) for x in mix), self._mu_token)
                 if key not in self._targets:
                     self._cache_put(key, N)
         if self.l > 1:
-            _, lost_xs = grid(np.stack([np.delete(self.mu, j, axis=1)
-                                        for j in range(self.l)]))
+            _, lost_xs, lost_e, lost_edp = grid(
+                np.stack([np.delete(self.mu, j, axis=1)
+                          for j in range(self.l)]))
         else:
             # losing the only pool leaves nowhere to run: X_sys = 0
             lost_xs = np.zeros((1, len(mixes)))
+            lost_e = np.full((1, len(mixes)), np.inf)
+            lost_edp = np.full((1, len(mixes)), np.inf)
         if added_columns is not None and len(added_columns):
             cols = np.asarray(added_columns, dtype=np.float64)
-            _, added_xs = grid(np.stack([
+            _, added_xs, added_e, added_edp = grid(np.stack([
                 np.concatenate([self.mu, c[:, None]], axis=1) for c in cols]))
         else:
             added_xs = np.zeros((0, len(mixes)))
+            added_e = np.zeros((0, len(mixes)))
+            added_edp = np.zeros((0, len(mixes)))
         return {"base": base_xs[0], "pool_lost": lost_xs,
-                "pool_added": added_xs}
+                "pool_added": added_xs,
+                "base_energy": base_e[0], "pool_lost_energy": lost_e,
+                "pool_added_energy": added_e,
+                "base_edp": base_edp[0], "pool_lost_edp": lost_edp,
+                "pool_added_edp": added_edp}
 
     # ---------------- routing ----------------
     def _internal_view(self) -> SystemView:

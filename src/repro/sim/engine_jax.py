@@ -119,21 +119,27 @@ def _simulate_fleet(mu, P, target, rank, types0, keys, modes, *, order,
         state = (key, jnp.float32(0.0), proc0, need0, need0, sizes0,
                  jnp.zeros(n, jnp.float32), jnp.arange(n, dtype=jnp.int32),
                  counts0, jnp.float32(0.0), jnp.float32(0.0),
-                 jnp.float32(0.0), jnp.zeros((k, l), jnp.float32))
+                 jnp.float32(0.0), jnp.float32(0.0),
+                 jnp.zeros((k, l), jnp.float32))
 
         def step(state, i):
             (key, now, proc, remaining, need, size_left, entry, stamp,
-             counts, t_start, sum_resp, sum_energy, occ) = state
+             counts, t_start, sum_resp, sum_energy, sum_power, occ) = state
             mask = proc[:, None] == jnp.arange(l)[None, :]       # (n, l)
             cnt = mask.sum(0)
             cntf = cnt.astype(jnp.float32)
             if order_ps:
                 rem_col = jnp.where(mask, remaining[:, None], jnp.inf)
                 dtj = jnp.where(cnt > 0, rem_col.min(0) * cntf, jnp.inf)
+                # occupancy-weighted draw: each resident burns P/c_j
+                pw = (P[types0, proc] / cntf[proc]).sum()
             else:
                 stamp_col = jnp.where(mask, stamp[:, None], _BIG_STAMP)
                 head = jnp.argmin(stamp_col, axis=0)             # (l,)
                 dtj = jnp.where(cnt > 0, remaining[head], jnp.inf)
+                # heads run alone at full rate; idle columns draw nothing
+                pw = jnp.where(cnt > 0,
+                               P[types0[head], jnp.arange(l)], 0.0).sum()
             j_star = jnp.argmin(dtj)
             dt = dtj[j_star]
             now = now + dt
@@ -158,6 +164,7 @@ def _simulate_fleet(mu, P, target, rank, types0, keys, modes, *, order,
             sum_resp = sum_resp + jnp.where(in_win, now - entry[pid], 0.0)
             sum_energy = sum_energy + jnp.where(
                 in_win, P[t, j_star] * need[pid], 0.0)
+            sum_power = sum_power + jnp.where(in_win, dt, 0.0) * pw
             t_start = jnp.where(i == warmup - 1, now, t_start)
 
             # closed system: the program's next task routes immediately (the
@@ -176,17 +183,18 @@ def _simulate_fleet(mu, P, target, rank, types0, keys, modes, *, order,
             proc = proc.at[pid].set(j_new)
             stamp = stamp.at[pid].set(n + i)
             return (key, now, proc, remaining, need, size_left, entry, stamp,
-                    counts, t_start, sum_resp, sum_energy, occ), None
+                    counts, t_start, sum_resp, sum_energy, sum_power,
+                    occ), None
 
         state, _ = jax.lax.scan(step, state,
                                 jnp.arange(n_steps, dtype=jnp.int32))
         (_, now, _, _, _, _, _, _, _, t_start, sum_resp, sum_energy,
-         occ) = state
+         sum_power, occ) = state
         measured = jnp.float32(n_steps - warmup)
         elapsed = now - t_start
         x = measured / elapsed
         return (x, sum_resp / measured, sum_energy / measured, elapsed,
-                occ / elapsed)
+                occ / elapsed, sum_power / elapsed)
 
     return jax.vmap(one)(mu, P, target, rank, types0, keys, modes)
 
@@ -201,7 +209,10 @@ def simulate_batch(mu, targets, types0, seeds, *, distribution, order="PS",
     modes: (B,) route modes (MODE_DEFICIT default, MODE_JSQ, MODE_LB —
     baseline points ignore their target rows).
     Returns a dict of NumPy arrays: throughput/mean_response_time/mean_energy
-    /edp/little_product (B,), elapsed (B,), state_occupancy (B, k, l).
+    /edp/little_product/mean_power (B,), elapsed (B,), state_occupancy
+    (B, k, l); mean_power is the occupancy-weighted P_ij integral over the
+    measurement window divided by elapsed (mean_power / throughput is the
+    trajectory-measured E[E], eq. 19).
     """
     targets = np.asarray(targets)
     B, k, l = targets.shape
@@ -225,21 +236,22 @@ def simulate_batch(mu, targets, types0, seeds, *, distribution, order="PS",
         P = np.stack([power.power_matrix(m) for m in mus])
         ranks = np.stack([_mu_tiebreak_ranks(m) for m in mus])
     keys = np.stack([np.asarray(jax.random.PRNGKey(int(s))) for s in seeds])
-    x, et, ee, elapsed, occ = _simulate_fleet(
+    x, et, ee, elapsed, occ, pw = _simulate_fleet(
         jnp.asarray(mus, jnp.float32), jnp.asarray(P, jnp.float32),
         jnp.asarray(targets, jnp.int32), jnp.asarray(ranks), types0,
         jnp.asarray(keys), jnp.asarray(modes), order=order,
         dist_spec=_dist_spec(distribution),
         n_steps=int(n_completions), warmup=int(warmup_completions))
-    x, et, ee = (np.asarray(v, np.float64) for v in (x, et, ee))
+    x, et, ee, pw = (np.asarray(v, np.float64) for v in (x, et, ee, pw))
     occ = np.asarray(occ, np.float64)
     if warmup_completions == 0:
         occ = np.zeros_like(occ)    # host convention: warmup==0 tracks none
+        pw = np.zeros_like(pw)      # mean_power follows the occ window
     return {"throughput": x, "mean_response_time": et, "mean_energy": ee,
             "edp": ee * et, "little_product": x * et,
             "completed": np.full(B, n_completions - warmup_completions),
             "elapsed": np.asarray(elapsed, np.float64),
-            "state_occupancy": occ}
+            "state_occupancy": occ, "mean_power": pw}
 
 
 def _types0_for(mix: np.ndarray) -> np.ndarray:
@@ -288,7 +300,8 @@ def _metrics_row(out: dict, i: int) -> "SimMetrics":
         little_product=float(out["little_product"][i]),
         completed=int(out["completed"][i]),
         elapsed=float(out["elapsed"][i]),
-        state_occupancy=out["state_occupancy"][i])
+        state_occupancy=out["state_occupancy"][i],
+        mean_power=float(out["mean_power"][i]))
 
 
 def sweep_jax(cfg, policy, *, mixes=None, seeds=None, mus=None):

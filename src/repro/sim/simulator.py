@@ -75,6 +75,11 @@ class SimMetrics:
     completed: int
     elapsed: float
     state_occupancy: np.ndarray         # time-averaged N_ij
+    # Occupancy-weighted power draw over the measurement window: the time
+    # integral of sum_j W_j (PS: W_j = sum_i N_ij P_ij / c_j; FCFS: the
+    # head's P) divided by elapsed. mean_power / throughput is the model's
+    # E[E] (eq. 19) measured from the trajectory rather than per completion.
+    mean_power: float = 0.0
 
 
 class ClosedNetworkSimulator:
@@ -148,11 +153,20 @@ class ClosedNetworkSimulator:
         last_t = [[0.0] * l for _ in range(k)]
         cnt_rows = [[0] * l for _ in range(k)]
 
+        # O(1)-per-event power integration: pw_sum is the instantaneous
+        # occupancy-weighted draw sum_j W_j. PS shares each processor, so
+        # W_j = sum_{residents} P[type, j] / n_j; FCFS runs the head alone
+        # at its full P. Both fold incrementally on admit/complete.
+        pw_num = [0.0] * l          # PS: sum of P[type, j] over residents
+        head_pw = [0.0] * l         # FCFS: P of the running head (0: idle)
+        pw_sum = 0.0
+        power_int = 0.0
+
         route = core.route
         now = 0.0
 
         def admit(pid: int) -> None:
-            nonlocal seq, size_ptr, size_buf
+            nonlocal seq, size_ptr, size_buf, pw_sum
             t = task_type[pid]
             j = route(t)
             if size_buf is None:
@@ -167,8 +181,14 @@ class ClosedNetworkSimulator:
             service_need[pid] = sn
             entry_time[pid] = now
             if order_ps:
+                old = pw_num[j] / n_res[j] if n_res[j] else 0.0
+                pw_num[j] += P_rows[t][j]
+                pw_sum += pw_num[j] / (n_res[j] + 1) - old
                 insort(ps_q[j], (-(V[j] + sn), -seq, pid))
             else:
+                if not fifo[j]:
+                    head_pw[j] = P_rows[t][j]
+                    pw_sum += head_pw[j]
                 remaining[pid] = sn
                 fifo[j].append(pid)
             seq += 1
@@ -210,6 +230,7 @@ class ClosedNetworkSimulator:
                         if dt < best_dt:
                             best_dt, best_j = dt, j
             assert best_j >= 0, "no runnable tasks — system cannot be empty"
+            power_int += best_dt * pw_sum   # draw over the elapsed interval
 
             # ---- advance time & deplete (O(l)) ----
             now += best_dt
@@ -230,6 +251,15 @@ class ClosedNetworkSimulator:
 
             # ---- complete ----
             t = task_type[pid]
+            if order_ps:
+                old = pw_num[j] / (n_res[j] + 1)
+                pw_num[j] -= P_rows[t][j]
+                pw_sum += (pw_num[j] / n_res[j] if n_res[j] else 0.0) - old
+            else:
+                pw_sum -= head_pw[j]
+                q = fifo[j]
+                head_pw[j] = P_rows[task_type[q[0]]][j] if q else 0.0
+                pw_sum += head_pw[j]
             core.complete(t, j)
             row = cnt_rows[t]
             occ_rows[t][j] += row[j] * (now - last_t[t][j])
@@ -241,6 +271,7 @@ class ClosedNetworkSimulator:
                 t_measure_start = now
                 in_window = True
                 occ_started = True
+                power_int = 0.0
                 for i in range(k):
                     oi, li = occ_rows[i], last_t[i]
                     for jj in range(l):
@@ -268,8 +299,9 @@ class ClosedNetworkSimulator:
                     occupancy[i, jj] += cnt_rows[i][jj] * (now - last_t[i][jj])
         else:
             occupancy[:] = 0.0      # pre-refactor quirk: warmup==0 tracks none
+            power_int = 0.0         # power window follows the occ convention
         return self._metrics(measured, now - t_measure_start, sum_resp,
-                             sum_energy, occupancy)
+                             sum_energy, occupancy, power_int)
 
     # ------------------------------------------------------------------
     # Compat path: SystemView policies (LB/JSQ/RD/BF and custom choosers).
@@ -335,6 +367,7 @@ class ClosedNetworkSimulator:
         sum_energy = 0.0
         occupancy = np.zeros((self.k, self.l))
         occ_t0 = None
+        power_int = 0.0
 
         while completed < cfg.n_completions:
             # ---- find next completion ----
@@ -355,6 +388,18 @@ class ClosedNetworkSimulator:
             # ---- advance time & deplete ----
             if occ_t0 is not None:
                 occupancy += counts * best_dt
+                # occupancy-weighted draw (pure reads: routing/rng untouched)
+                draw = 0.0
+                for jj in range(self.l):
+                    ids = proc_tasks[jj]
+                    if not ids:
+                        continue
+                    if cfg.order == "PS":
+                        draw += sum(self.P[task_type[i], jj]
+                                    for i in ids) / len(ids)
+                    else:
+                        draw += self.P[task_type[ids[0]], jj]
+                power_int += best_dt * draw
             now += best_dt
             j = best_j
             for jj in range(self.l):
@@ -397,6 +442,7 @@ class ClosedNetworkSimulator:
                 t_measure_start = now
                 occ_t0 = now
                 occupancy[:] = 0.0
+                power_int = 0.0
             if in_window:
                 measured += 1
                 sum_resp += now - entry_time[pid]
@@ -413,10 +459,11 @@ class ClosedNetworkSimulator:
             admit(pid, now)
 
         return self._metrics(measured, now - t_measure_start, sum_resp,
-                             sum_energy, occupancy)
+                             sum_energy, occupancy, power_int)
 
     def _metrics(self, measured: int, elapsed: float, sum_resp: float,
-                 sum_energy: float, occupancy: np.ndarray) -> SimMetrics:
+                 sum_energy: float, occupancy: np.ndarray,
+                 power_int: float = 0.0) -> SimMetrics:
         x = measured / elapsed if elapsed > 0 else 0.0
         et = sum_resp / measured if measured else _INF
         ee = sum_energy / measured if measured else _INF
@@ -424,7 +471,9 @@ class ClosedNetworkSimulator:
         return SimMetrics(throughput=x, mean_response_time=et, mean_energy=ee,
                           edp=ee * et, little_product=x * et,
                           completed=measured, elapsed=elapsed,
-                          state_occupancy=occ)
+                          state_occupancy=occ,
+                          mean_power=power_int / elapsed if elapsed > 0
+                          else 0.0)
 
 
 def run_policy_sweep(cfg: SimConfig, policies,

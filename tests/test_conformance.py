@@ -1,0 +1,74 @@
+"""Cross-engine conformance suite: the host event core is the oracle every
+engine change is diffed against, in one place.
+
+One seeded (mu, mix, seed) grid runs under grin (deficit routing), LB and
+JSQ, under PS and FCFS, on both engines; the device engine must agree with
+the host on measured X_sys AND E/task within sampling tolerance (the engines
+use different RNG streams, so parity is statistical, per point and tighter
+in aggregate). The power model is the weak-affinity alpha=0.5 regime so the
+energy surface actually varies across placements. Structural identities
+(Little's law, power-integral vs per-completion energy accounting) must hold
+on both engines exactly as the model predicts.
+"""
+import numpy as np
+import pytest
+
+from repro.core.affinity import PowerModel
+from repro.sim import (ClosedNetworkSimulator, SimConfig, make_distribution,
+                       sweep_jax)
+
+POWER = PowerModel(alpha=0.5)
+MUS = np.stack([np.random.default_rng(11).uniform(1, 30, size=(3, 3)),
+                np.random.default_rng(12).uniform(1, 30, size=(3, 3))])
+MIXES = np.array([[10, 10, 10], [6, 14, 10]])
+SEEDS = [0, 1]
+N_COMPLETIONS, WARMUP = 4000, 800
+
+# per-point sampling noise at ~3200 measured completions; the mean over the
+# grid cancels most of it
+PT_TOL, MEAN_TOL = 0.15, 0.05
+
+
+def _cfg(mu, mix, seed, order):
+    return SimConfig(mu=mu, n_programs_per_type=np.asarray(mix),
+                     distribution=make_distribution("exponential"),
+                     order=order, power=POWER, n_completions=N_COMPLETIONS,
+                     warmup_completions=WARMUP, seed=seed)
+
+
+def _host_grid(policy, order):
+    return [ClosedNetworkSimulator(_cfg(MUS[g], mix, s, order)).run(policy)
+            for g, mix, s in _grid_index()]
+
+
+def _grid_index():
+    return [(g, mix, s) for g in range(len(MUS)) for mix in MIXES
+            for s in SEEDS]
+
+
+@pytest.mark.parametrize("order", ["PS", "FCFS"])
+@pytest.mark.parametrize("policy", ["grin", "lb", "jsq"])
+def test_engine_conformance_x_and_energy(policy, order):
+    cfg = _cfg(MUS[0], MIXES[0], SEEDS[0], order)
+    grid, dev = sweep_jax(cfg, policy, mixes=MIXES, seeds=SEEDS, mus=MUS)
+    host = _host_grid(policy, order)
+    assert [(g, s) for g, _, s in grid] == \
+        [(g, s) for g, _, s in _grid_index()]
+    x_rel, e_rel = [], []
+    for i, h in enumerate(host):
+        x_rel.append(abs(dev["throughput"][i] - h.throughput) / h.throughput)
+        e_rel.append(abs(dev["mean_energy"][i] - h.mean_energy)
+                     / h.mean_energy)
+        # structural: Little's law and the two energy accountings agree on
+        # BOTH engines (power integral / X == per-completion E[E])
+        n = MIXES[0].sum()
+        assert dev["little_product"][i] == pytest.approx(n, rel=0.05)
+        assert h.little_product == pytest.approx(n, rel=0.05)
+        assert dev["mean_power"][i] / dev["throughput"][i] == pytest.approx(
+            dev["mean_energy"][i], rel=0.03)
+        assert h.mean_power / h.throughput == pytest.approx(
+            h.mean_energy, rel=0.03)
+    assert max(x_rel) < PT_TOL, (policy, order, x_rel)
+    assert max(e_rel) < PT_TOL, (policy, order, e_rel)
+    assert np.mean(x_rel) < MEAN_TOL, (policy, order, x_rel)
+    assert np.mean(e_rel) < MEAN_TOL, (policy, order, e_rel)

@@ -174,6 +174,66 @@ def test_max_throughput_minimizes_energy_and_edp():
     assert xmap[best_x] == pytest.approx(xmap[best_edp], rel=1e-6)
 
 
+def _busy_states(n_tasks, l):
+    """All placements with every column non-empty (small instances only)."""
+    import itertools
+    from repro.core.exhaustive import compositions
+    rows = [list(compositions(int(n), l)) for n in n_tasks]
+    for combo in itertools.product(*rows):
+        N = np.asarray(combo, dtype=np.int64)
+        if (N.sum(axis=0) > 0).all():
+            yield N
+
+
+@given(st.integers(0, 2_000))
+def test_max_throughput_minimizes_energy_and_edp_general(seed):
+    """Lemma 6 generalized to random k x l: over every all-columns-busy
+    placement, argmax X == argmin E (constant power, E = l/X), E is the
+    constant k_coeff under proportional power (eq. 23), and argmin EDP ==
+    argmax X under both scenarios."""
+    rng = np.random.default_rng(seed)
+    k, l = rng.integers(2, 4, size=2)
+    mu = random_affinity_matrix(rng, k, l)
+    nt = rng.integers(1, 5, size=k)
+    if nt.sum() < l:                       # not enough tasks to fill columns
+        nt[0] += l - nt.sum()
+    states = list(_busy_states(nt, l))
+    if not states:
+        return
+    xs = np.array([system_throughput(N, mu) for N in states])
+    e_const = np.array([expected_energy_per_task(N, mu, CONSTANT_POWER)
+                        for N in states])
+    x_best = xs.max()
+    assert xs[np.argmin(e_const)] == pytest.approx(x_best, rel=1e-9)
+    np.testing.assert_allclose(e_const, l / xs, rtol=1e-9)   # eq. 22
+    for N in states[:20]:
+        assert expected_energy_per_task(N, mu, PROPORTIONAL_POWER) == \
+            pytest.approx(1.0, rel=1e-9)                     # eq. 23
+    for power in (CONSTANT_POWER, PROPORTIONAL_POWER):
+        edps = np.array([edp(N, mu, power) for N in states])
+        assert xs[np.argmin(edps)] == pytest.approx(x_best, rel=1e-9)
+
+
+@given(st.integers(0, 10_000))
+def test_scenario_identities_random_busy_states(seed):
+    """eq. 22/23 closed forms hold for random (N, mu) with all columns busy
+    under CONSTANT and PROPORTIONAL power."""
+    rng = np.random.default_rng(seed)
+    k, l = rng.integers(2, 5, size=2)
+    mu = random_affinity_matrix(rng, k, l)
+    N = rng.integers(0, 7, size=(k, l))
+    N[rng.integers(k), N.sum(axis=0) == 0] = 1     # fill empty columns
+    ids = scenario_identities(N, mu)
+    assert expected_energy_per_task(N, mu, CONSTANT_POWER) == \
+        pytest.approx(ids["const_power_energy"], rel=1e-9)
+    assert expected_energy_per_task(N, mu, PROPORTIONAL_POWER) == \
+        pytest.approx(ids["prop_power_energy"], rel=1e-9)
+    assert edp(N, mu, CONSTANT_POWER) == \
+        pytest.approx(ids["const_power_edp"], rel=1e-9)
+    assert edp(N, mu, PROPORTIONAL_POWER) == \
+        pytest.approx(ids["prop_power_edp"], rel=1e-9)
+
+
 # ---------------------------------------------------------------- GrIn++
 
 @given(st.integers(0, 2_000))

@@ -85,6 +85,11 @@ def test_engine_matches_host_metrics(order, dist):
     # structural identities hold on-device
     assert dev.little_product == pytest.approx(NT3.sum(), rel=0.03)
     assert dev.mean_energy == pytest.approx(1.0, rel=0.06)   # eq. 23
+    # occupancy-weighted power integral agrees with per-completion energy
+    assert dev.mean_power / dev.throughput == pytest.approx(
+        dev.mean_energy, rel=0.03)
+    assert host.mean_power / host.throughput == pytest.approx(
+        host.mean_energy, rel=0.03)
 
 
 def test_engine_occupancy_tracks_host():
@@ -179,6 +184,33 @@ def test_simulate_batch_validates_shapes():
         simulate_batch(MU3, tgt[None], np.zeros((1, 30), np.int32), [0],
                        distribution=cfg.distribution,
                        n_completions=100, warmup_completions=100)
+
+
+def test_type_mix_device_paths_raise_cleanly():
+    """Regression for the piecewise type_mix seams: every device entry point
+    refuses type_mix configs with a clean ValueError (they have no on-device
+    re-draw) instead of crashing mid-trace."""
+    cfg = _cfg(type_mix=np.array([0.3, 0.4, 0.3]), n_completions=600,
+               warmup_completions=100)
+    with pytest.raises(ValueError, match="type_mix"):
+        simulate_policy_jax(cfg, SchedulerCore("grin", cfg.mu))
+    with pytest.raises(ValueError, match="type_mix"):
+        sweep_jax(cfg, "grin")
+    with pytest.raises(ValueError, match="type_mix"):
+        compare_policies_jax(cfg, ["grin", "lb"])
+
+
+def test_run_policy_sweep_routes_type_mix_to_host():
+    """`run_policy_sweep(engine="jax")` silently sends type_mix configs to
+    the host core — identical stream, bit-equal to an explicit host run."""
+    cfg = _cfg(type_mix=np.array([0.3, 0.4, 0.3]), n_completions=800,
+               warmup_completions=160)
+    dev = run_policy_sweep(cfg, ["grin", "lb"], engine="jax")
+    host = run_policy_sweep(cfg, ["grin", "lb"], engine="host")
+    for name in ("GrIn", "LB"):
+        assert dev[name].throughput == host[name].throughput
+        assert dev[name].mean_energy == host[name].mean_energy
+        assert dev[name].mean_power == host[name].mean_power
 
 
 def test_run_policy_sweep_jax_engine_falls_back_for_stateless():
