@@ -16,6 +16,18 @@ from repro.core.grin import (GrInBlockResult, GrInResult, grin_block_solve,
                              grin_init, grin_solve, grin_solve_batch_jax,
                              grin_solve_jax)
 from repro.core.grin_energy import GrInEnergyResult, grin_energy_solve
+from repro.core.priority import (GrInPriorityResult, cab_priority_solve,
+                                 class_energy_per_task, class_of_flat,
+                                 class_throughputs,
+                                 class_throughputs_batch_jax,
+                                 delta_w_add_block_priority,
+                                 delta_w_remove_block_priority,
+                                 delta_xw_add_block_priority,
+                                 delta_xw_remove_block_priority, flat_mu,
+                                 flatten_mixes, flatten_state,
+                                 grin_priority_solve,
+                                 grin_solve_priority_batch_jax, priority_mu,
+                                 unflatten_state, weighted_system_throughput)
 from repro.core.grin_plus import (grin_multistart_solve, grin_plus_solve,
                                   grin_solve_from)
 from repro.core.slsqp import (SLSQPResult, round_largest_remainder,

@@ -411,7 +411,7 @@ def _objective_id(objective: str) -> int:
 def grin_solve_batch_jax(mu, n_tasks_batch, *, n_sizes: int | None = None,
                          max_moves: int | None = None,
                          use_kernel: bool | None = None,
-                         objective: str = "max-x", power=None):
+                         objective: str = "max-x", power=None, P=None):
     """Block-move GrIn over a batch of instances, in one device call.
 
     mu: (k, l) shared or (B, k, l) per-instance affinities; n_tasks_batch:
@@ -432,6 +432,12 @@ def grin_solve_batch_jax(mu, n_tasks_batch, *, n_sizes: int | None = None,
                   X-plateau energy polish (GrIn-E)
       "min-e"   — E[E] descent (eq. 19)
       "min-edp" — EDP descent (eq. 21)
+
+    `P` overrides the power matrix the energy objectives score against
+    ((k, l) or (B, k, l)), for callers whose mu is NOT the physical rate
+    matrix — the priority solvers rank moves under class-weighted
+    affinities but watts stay class-blind, so they pass the physical tile
+    here instead of letting P derive from the weighted mu.
     """
     mixes = jnp.asarray(n_tasks_batch, dtype=jnp.float32)
     mus = jnp.asarray(mu, dtype=jnp.float32)
@@ -447,6 +453,8 @@ def grin_solve_batch_jax(mu, n_tasks_batch, *, n_sizes: int | None = None,
     from repro.kernels.grin_moves import OBJ_X
     if obj == OBJ_X:
         Ps = mus            # unused by the throughput objective
+    elif P is not None:
+        Ps = jnp.broadcast_to(jnp.asarray(P, jnp.float32), mus.shape)
     else:
         from repro.core.affinity import PROPORTIONAL_POWER
         from repro.core.energy import power_matrix_jax

@@ -4,6 +4,8 @@ from repro.sched.api import (Policy, SchedulerCore, SystemView, as_core,
                              available_policies, get_policy, register_policy,
                              solve_targets_grid_jax, solve_targets_jax)
 from repro.sched.baselines import BaselineClusterScheduler
+from repro.sched.priority import (CABPriorityPolicy, GrInPriorityPolicy,
+                                  priority_sim_config)
 from repro.sched.cluster import (ChipSpec, HeterogeneousCluster, Pool,
                                  PoolSpec, TaskRecord)
 from repro.sched.rates import (StepCost, affinity_from_roofline,

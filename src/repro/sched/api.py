@@ -22,8 +22,15 @@ Policies are constructed through a string registry:
     >>> j = core.route(task_type)            # largest-deficit dispatch
     >>> core.complete(task_type, j, service_s=dt)   # EWMA rate feedback
     >>> available_policies()
-    ('bf', 'cab', 'cab-e', 'fixed', 'grin', 'grin+', 'grin-e', 'grin-edp',
-     'jsq', 'lb', 'opt', 'rd', 'slsqp')
+    ('bf', 'cab', 'cab-e', 'cab-p', 'fixed', 'grin', 'grin+', 'grin-e',
+     'grin-edp', 'grin-p', 'jsq', 'lb', 'opt', 'rd', 'slsqp')
+
+Priority-class policies (`repro.sched.priority`: grin-p/cab-p) run on a
+class-major FLATTENED problem — row (c*k + i) of mu is class c's i-type —
+so `SchedulerCore` keeps per-(class, type) deficits with no extra state;
+the target-cache key includes the class-weight vector, and the engines'
+strict-priority service order (`order="PRIO"`) supplies the preemption-free
+class ordering at the processors.
 
 `solve_targets_jax` batches target re-solves over many type-mixes on device
 (block-move GrIn; `solver="single"` keeps the one-move-per-step variant) and
@@ -87,6 +94,10 @@ class Policy:
       power              — PowerModel the energy objectives score against
                            (None: throughput-only policy; energy what-ifs
                            default to proportional power).
+      class_weights      — priority-class weight vector (C,) for multi-class
+                           policies (None: single-class). It is part of the
+                           SchedulerCore target-cache key, so a weight
+                           update can never be served a stale target.
     """
 
     name = "base"
@@ -97,10 +108,17 @@ class Policy:
     supports_jax_batch = False
     jax_objective = "max-x"
     power: PowerModel | None = None
+    class_weights: np.ndarray | None = None
 
     def solve_target(self, mu: np.ndarray, n_tasks: np.ndarray) -> np.ndarray:
         """Return the (k, l) target placement N* for the given type mix."""
         raise NotImplementedError(f"{self.name} is not a target policy")
+
+    def device_mu(self, mu: np.ndarray) -> np.ndarray:
+        """The affinity matrix the batched device solver should rank moves
+        under. Identity for single-class policies; priority policies return
+        the class-weighted rows (weights fold into mu, physics does not)."""
+        return mu
 
     def choose(self, task_type: int, view: SystemView,
                rng: np.random.Generator) -> int:
@@ -361,9 +379,23 @@ def _repair_targets(raw: np.ndarray, mixes: np.ndarray) -> np.ndarray:
     return np.maximum(out, 0)
 
 
+def physical_power_matrix(policy: Policy, mus: np.ndarray):
+    """(G, k, l) (or (k, l)) PHYSICAL power matrices for a policy's energy
+    objective, or None for throughput objectives (unused). Always derived
+    from the physical `mus`, never the class-weighted `device_mu` — class
+    weights shape preferences, not watts."""
+    if policy.jax_objective == "max-x":
+        return None
+    power = policy.power or PROPORTIONAL_POWER
+    mus = np.asarray(mus, dtype=np.float64)
+    if mus.ndim == 2:
+        return power.power_matrix(mus)
+    return np.stack([power.power_matrix(m) for m in mus])
+
+
 def solve_targets_jax(mu, n_tasks_batch, solver: str = "block",
                       objective: str = "max-x",
-                      power: PowerModel | None = None):
+                      power: PowerModel | None = None, P=None):
     """Batched GrIn re-solve over many type mixes, vectorized on device.
 
     Returns (targets (B, k, l) int64, x_sys (B,) float), with row sums
@@ -377,7 +409,10 @@ def solve_targets_jax(mu, n_tasks_batch, solver: str = "block",
     maxima of the same objective and may land in a different (same-quality-
     class) basin than the host sweep solver. `objective`/`power` switch the
     block solver to the energy objectives (GrIn-E/GrIn-EDP); the single-move
-    solver is throughput-only.
+    solver is throughput-only. `P` overrides the power matrix the energy
+    objectives price moves against — callers solving under a class-weighted
+    `device_mu` pass the PHYSICAL matrix here (see `physical_power_matrix`)
+    so watts are never scaled by weights.
     """
     mu = jnp.asarray(mu, dtype=jnp.float32)
     mixes_np = np.asarray(n_tasks_batch)
@@ -388,7 +423,7 @@ def solve_targets_jax(mu, n_tasks_batch, solver: str = "block",
     if solver == "block":
         targets, xs, _, _ = grin_solve_batch_jax(mu, mixes_np,
                                                  objective=objective,
-                                                 power=power)
+                                                 power=power, P=P)
     elif solver == "single":
         if objective != "max-x":
             raise ValueError("energy objectives need solver='block'")
@@ -400,7 +435,7 @@ def solve_targets_jax(mu, n_tasks_batch, solver: str = "block",
 
 def solve_targets_grid_jax(mus, mixes, solver: str = "block",
                            objective: str = "max-x",
-                           power: PowerModel | None = None):
+                           power: PowerModel | None = None, P=None):
     """Whole (mu x mix) target grid in one device call.
 
     mus: (G, k, l) affinity matrices; mixes: (M, k) type mixes. Returns
@@ -409,7 +444,9 @@ def solve_targets_grid_jax(mus, mixes, solver: str = "block",
     whole grid costs one compiled while-loop whose depth is the slowest
     instance's block-move count. This is what makes thousand-point elastic /
     energy what-if sweeps (mu batching) cheap enough to run interactively.
-    `objective`/`power` switch the block solver to the energy objectives.
+    `objective`/`power` switch the block solver to the energy objectives;
+    `P` ((G, k, l) or (k, l)) overrides the priced power matrix — the
+    physical one when `mus` are class-weighted (`physical_power_matrix`).
     """
     mus = np.asarray(mus, dtype=np.float64)
     mixes = np.asarray(mixes, dtype=np.int64)
@@ -420,10 +457,12 @@ def solve_targets_grid_jax(mus, mixes, solver: str = "block",
     M = mixes.shape[0]
     mu_b = np.repeat(mus, M, axis=0)                    # (G*M, k, l)
     mix_b = np.tile(mixes, (G, 1))                      # (G*M, k)
+    if P is not None and np.ndim(P) == 3:
+        P = np.repeat(np.asarray(P), M, axis=0)         # align with mu_b
     if solver == "block":
         raw, xs, conv, _ = grin_solve_batch_jax(mu_b, mix_b,
                                                 objective=objective,
-                                                power=power)
+                                                power=power, P=P)
         conv = np.asarray(conv).reshape(G, M)
     elif solver == "single":
         if objective != "max-x":
@@ -575,10 +614,32 @@ class SchedulerCore:
             self._targets.pop(next(iter(self._targets)))
         self._targets[key] = target
 
+    def _weights_key(self) -> tuple | None:
+        """Priority-class weight vector as a hashable cache-key component.
+        Weight updates via `set_class_weights` change this key, so a warm
+        cache can never serve a target solved under stale weights."""
+        w = self.policy.class_weights
+        return None if w is None else tuple(float(x) for x in w)
+
+    def set_class_weights(self, weights) -> None:
+        """Update the policy's priority-class weight vector. Targets re-solve
+        lazily because the weights are part of every cache key; the pinned
+        fast-path rows are dropped eagerly."""
+        cur = self.policy.class_weights
+        if cur is None:
+            raise ValueError(f"{self.policy.name} is not a priority-class "
+                             "policy (no class_weights)")
+        w = np.asarray(weights, dtype=np.float64)
+        if w.shape != (len(cur),) or (w < 0).any():
+            raise ValueError(f"weights must be a nonneg ({len(cur)},) "
+                             f"vector; got {weights!r}")
+        self.policy.class_weights = w
+        self._pinned_rows = None
+
     def _target_for(self, n_tasks: np.ndarray,
                     key_hint: tuple | None = None) -> np.ndarray:
         key = ((tuple(int(x) for x in n_tasks) if key_hint is None
-                else key_hint), self._mu_token)
+                else key_hint), self._mu_token, self._weights_key())
         hit = self._targets.get(key)
         if hit is None:
             hit = np.asarray(self.policy.solve_target(self.mu, np.asarray(n_tasks)))
@@ -629,11 +690,14 @@ class SchedulerCore:
         mixes = np.asarray(mixes, dtype=np.int64)
         if self.policy.supports_jax_batch and self.policy.needs_target:
             targets, _ = solve_targets_jax(
-                self.mu, mixes, objective=self.policy.jax_objective,
-                power=self.policy.power)
+                self.policy.device_mu(self.mu), mixes,
+                objective=self.policy.jax_objective,
+                power=self.policy.power,
+                P=physical_power_matrix(self.policy, self.mu))
             added = 0
             for mix, N in zip(mixes, targets):
-                key = (tuple(int(x) for x in mix), self._mu_token)
+                key = (tuple(int(x) for x in mix), self._mu_token,
+                       self._weights_key())
                 if key in self._targets:
                     continue
                 self._cache_put(key, N)
@@ -655,11 +719,14 @@ class SchedulerCore:
 
         mixes: (M, k) type mixes (default: the pinned mix); added_columns:
         (A, k) candidate mu columns for `pool_added`. Returns
-        {"base": (M,), "pool_lost": (l, M), "pool_added": (A, M)} of X_sys
-        values plus matching "*_energy" (E[E] per task, eq. 19) and "*_edp"
-        (eq. 21) grids, answering "what does losing pool j / adding this
-        pool do to achievable throughput and energy across these mixes"
-        without touching live state. With `warm=True` the base-topology
+        {"base": (M,), "pool_lost": (l, M), "pool_added": (A, M)} of the
+        policy's OBJECTIVE throughput (X_sys; the class-weighted
+        sum_c w_c X_c for priority policies) plus matching "*_energy"
+        (E[E] per task, eq. 19) and "*_edp" (eq. 21) grids — both always
+        physical, weights never scale watts or the EDP delay term —
+        answering "what does losing pool j / adding this pool do to
+        achievable throughput and energy across these mixes" without
+        touching live state. With `warm=True` the base-topology
         targets are inserted into the target cache, so routing on any of
         the mixes after a `notify_type_counts` is already warm.
         """
@@ -675,16 +742,21 @@ class SchedulerCore:
         ntot = mixes.sum(axis=1).astype(np.float64)     # (M,)
 
         def grid(mus: np.ndarray):
+            from repro.core.throughput import system_throughput
             if self.policy.supports_jax_batch:
+                # solve AND score under the policy's device matrix (class-
+                # weighted for priority policies): xs is the policy's
+                # objective value, identical semantics on both branches
                 targets, xs, _ = solve_targets_grid_jax(
-                    mus, mixes, objective=self.policy.jax_objective,
-                    power=self.policy.power)
+                    np.stack([self.policy.device_mu(m) for m in mus]), mixes,
+                    objective=self.policy.jax_objective,
+                    power=self.policy.power,
+                    P=physical_power_matrix(self.policy, mus))
             else:
-                from repro.core.throughput import system_throughput
                 targets = np.stack([
                     np.stack([np.asarray(self.policy.solve_target(m, mix))
                               for mix in mixes]) for m in mus])
-                xs = np.array([[system_throughput(N, m)
+                xs = np.array([[system_throughput(N, self.policy.device_mu(m))
                                 for N in row] for m, row in zip(mus, targets)])
             G, M = xs.shape
             energy = np.asarray(expected_energy_batch_jax(
@@ -692,14 +764,23 @@ class SchedulerCore:
                 np.repeat(mus, M, axis=0),
                 np.repeat(np.stack([power.power_matrix(m) for m in mus]),
                           M, axis=0)), dtype=np.float64).reshape(G, M)
+            # energy and EDP stay PHYSICAL (eq. 19/21: watts and X_sys are
+            # class-blind) — for priority policies xs above is the weighted
+            # objective, so EDP's delay term uses its own physical X_sys;
+            # single-class policies (device_mu identity) reuse xs as-is
+            x_phys = xs if self.policy.class_weights is None else np.array(
+                [[system_throughput(N, m)
+                  for N in row] for m, row in zip(mus, targets)])
             with np.errstate(divide="ignore"):
-                edp = energy * np.where(xs > 0, ntot[None, :] / xs, np.inf)
+                edp = energy * np.where(x_phys > 0, ntot[None, :] / x_phys,
+                                        np.inf)
             return targets, xs, energy, edp
 
         base_targets, base_xs, base_e, base_edp = grid(self.mu[None])
         if warm:
             for mix, N in zip(mixes, base_targets[0]):
-                key = (tuple(int(x) for x in mix), self._mu_token)
+                key = (tuple(int(x) for x in mix), self._mu_token,
+                       self._weights_key())
                 if key not in self._targets:
                     self._cache_put(key, N)
         if self.l > 1:

@@ -1,21 +1,35 @@
 """Batched on-device closed-network simulation (`lax.scan` event core).
 
 One device call simulates a whole fleet of closed networks: the per-event
-logic (next completion, PS/FCFS depletion, routing, task-size sampling) is a
-`lax.scan` step, and `vmap` batches it over seeds, type mixes, targets,
-affinity matrices, and now routing policies — a Figs. 4-12-style sweep runs
-as a single XLA program instead of thousands of Python events per point.
+logic (next completion, PS/FCFS/PRIO depletion, routing, task-size sampling)
+is a `lax.scan` step, and `vmap` batches it over seeds, type mixes, targets,
+affinity matrices, and routing policies — a Figs. 4-12-style sweep runs as a
+single XLA program instead of thousands of Python events per point.
 
 Scope and semantics:
 
-  * Per-point route modes: deficit (target policies), JSQ, and LB. Deficit
-    routing uses the same strict lexicographic key as
-    `SchedulerCore.route_many`, so given identical event sequences the route
-    decisions match the host rule exactly. JSQ picks the fewest-resident
-    column (lowest index on ties, like `np.argmin`); LB picks the column
-    with the least remaining true work, tracked per task in work units that
-    deplete with service received (the host compat loop's semantics).
-    RD/BF and custom SystemView choosers stay host-only.
+  * Per-point route modes: deficit (target policies) plus ALL four classic
+    baselines — JSQ, LB, RD and BF. Deficit routing uses the same strict
+    lexicographic key as `SchedulerCore.route_many`, so given identical
+    event sequences the route decisions match the host rule exactly. JSQ
+    picks the fewest-resident column, LB the least remaining true work
+    (host-compat semantics), BF the fastest column for the type; RD draws
+    uniformly from its own fold_in key, so adding it left every other
+    mode's random stream untouched. Custom SystemView choosers stay
+    host-only.
+  * Service orders: PS, FCFS, and PRIO — strict-priority preemption-free
+    (arXiv:1712.03246): the running head always finishes; the next to run
+    is the oldest waiting task of the highest-priority class present
+    (class 0 first; `class_of_type` maps types to classes).
+  * Per-class metrics: throughput, response time, energy and occupancy per
+    priority class ride along in every result dict / SimMetrics (the C == 1
+    reductions for single-class configs); `class_distributions` gives each
+    class its own task-size distribution.
+  * Piecewise type re-draw (`type_mix`): each completed program's next task
+    re-draws its type from the mix probabilities on device. The deficit
+    target is pinned at the EXPECTED mix (largest-remainder rounding of
+    N * p) — the quasi-static approximation of the host core's per-mix
+    re-solve — so results are statistically, not bit-, comparable to host.
   * Targets are solved on the host or batched on device
     (`solve_targets_jax` / whole (mu x mix) grids via
     `solve_targets_grid_jax` when `mus` is batched).
@@ -23,11 +37,9 @@ Scope and semantics:
     statistically equivalent to the host core, not bit-identical (the parity
     suite pins throughput/energy/Little's-law agreement instead).
   * float32 state (device-friendly); fine for the paper's metric tolerances.
-  * Fixed closed populations (no piecewise type re-draw): callers with
-    `type_mix` fall back to the host core.
 
 `compare_policies_jax` runs a full Fig. 9-style policy comparison — every
-target policy plus the LB/JSQ baselines — as ONE batched device call.
+target policy plus the on-device baselines — as ONE batched device call.
 """
 from __future__ import annotations
 
@@ -46,8 +58,9 @@ _BIG_STAMP = np.int32(2**31 - 1)
 
 # Route modes carried per batch point (data, not trace-time statics, so one
 # compiled program serves mixed-policy batches).
-MODE_DEFICIT, MODE_JSQ, MODE_LB = 0, 1, 2
-_BASELINE_MODES = {"jsq": MODE_JSQ, "lb": MODE_LB}
+MODE_DEFICIT, MODE_JSQ, MODE_LB, MODE_RD, MODE_BF = 0, 1, 2, 3, 4
+_BASELINE_MODES = {"jsq": MODE_JSQ, "lb": MODE_LB, "rd": MODE_RD,
+                   "bf": MODE_BF}
 
 
 def _dist_spec(distribution) -> tuple:
@@ -79,67 +92,108 @@ def _size_sampler(spec: tuple):
     return sample
 
 
-@functools.partial(jax.jit, static_argnames=("order", "dist_spec",
-                                             "n_steps", "warmup"))
-def _simulate_fleet(mu, P, target, rank, types0, keys, modes, *, order,
-                    dist_spec, n_steps, warmup):
-    """vmapped scan core. All array args carry a leading batch axis B:
-    mu/P/target/rank (B, k, l), types0 (B, n), keys (B, 2), modes (B,)."""
-    sample = _size_sampler(dist_spec)
+def _expected_mix(probs: np.ndarray, n: int) -> np.ndarray:
+    """Largest-remainder rounding of n * probs to an integer mix summing to
+    n — the pinned mix the device engine solves the deficit target at."""
+    from repro.core.slsqp import round_largest_remainder
+    raw = np.asarray(probs, dtype=np.float64) * n
+    return round_largest_remainder(raw[None, :], np.array([n]))[0]
 
-    def one(mu, P, target, rank, types0, key, mode):
+
+@functools.partial(jax.jit, static_argnames=("order", "dist_specs",
+                                             "n_steps", "warmup", "cls_of",
+                                             "has_mix"))
+def _simulate_fleet(mu, P, target, rank, types0, keys, modes, mix_probs, *,
+                    order, dist_specs, n_steps, warmup, cls_of, has_mix):
+    """vmapped scan core. All array args carry a leading batch axis B:
+    mu/P/target/rank (B, k, l), types0 (B, n), keys (B, 2), modes (B,),
+    mix_probs (B, k). `cls_of` is the static (k,) type -> class map and
+    `dist_specs` the per-class size-distribution specs (len 1: shared)."""
+    samplers = [_size_sampler(s) for s in dist_specs]
+    n_cls = max(cls_of) + 1
+
+    def one(mu, P, target, rank, types0, key, mode, mix_p):
         k, l = mu.shape
         n = types0.shape[0]
         order_ps = order == "PS"
+        order_prio = order == "PRIO"
+        cls_arr = jnp.asarray(cls_of, jnp.int32)
+        idx_n = jnp.arange(n, dtype=jnp.int32)
+        cols = jnp.arange(l)
+        stamp_cap = jnp.int32(n + n_steps + 2)   # PRIO key stride > any stamp
+        logp = jnp.where(mix_p > 0, jnp.log(mix_p), -jnp.inf)
 
-        def route_one(counts, backlog, t):
+        def sample_for(skey, t):
+            if len(samplers) == 1:
+                return samplers[0](skey)
+            # small C: draw every class's candidate, keep the task's
+            return jnp.stack([s(skey) for s in samplers])[cls_arr[t]]
+
+        def route_one(counts, backlog, t, rkey):
             j_def = deficit_route_jax(target, rank, counts, t)
             j_jsq = jnp.argmin(counts.sum(0))
             j_lb = jnp.argmin(backlog)
+            j_bf = jnp.argmax(mu[t])
+            j_rd = jax.random.randint(rkey, (), 0, l)
             return jnp.where(mode == MODE_JSQ, j_jsq,
-                             jnp.where(mode == MODE_LB, j_lb, j_def))
+                             jnp.where(mode == MODE_LB, j_lb,
+                                       jnp.where(mode == MODE_RD, j_rd,
+                                                 jnp.where(mode == MODE_BF,
+                                                           j_bf, j_def))))
 
-        # ---- initial admissions: sequential routing, sizes pre-drawn (the
-        # routing consumes no randomness, so the stream is unchanged) ----
+        # ---- initial admissions: sequential routing, sizes pre-drawn from
+        # the same keys as before (routing only consumes its own fold_in
+        # keys, so existing modes' streams are unchanged) ----
         key, sub = jax.random.split(key)
-        sizes0 = jax.vmap(sample)(jax.random.split(sub, n))
+        init_keys = jax.random.split(sub, n)
+        sizes0 = jax.vmap(sample_for)(init_keys, types0)
 
-        def init_route(carry, ts):
-            counts, backlog = carry
-            t, s = ts
-            j = route_one(counts, backlog, t)
-            return (counts.at[t, j].add(1), backlog.at[j].add(s)), j
+        def init_route(carry, xs):
+            counts, backlog, run_pid, i = carry
+            t, s, ikey = xs
+            j = route_one(counts, backlog, t, jax.random.fold_in(ikey, 1))
+            was_idle = counts.sum(0)[j] == 0
+            run_pid = run_pid.at[j].set(
+                jnp.where(was_idle, i, run_pid[j]))
+            return (counts.at[t, j].add(1), backlog.at[j].add(s),
+                    run_pid, i + 1), j
 
-        (counts0, _), proc0 = jax.lax.scan(
+        (counts0, _, run0, _), proc0 = jax.lax.scan(
             init_route,
-            (jnp.zeros((k, l), jnp.int32), jnp.zeros(l, jnp.float32)),
-            (types0, sizes0))
+            (jnp.zeros((k, l), jnp.int32), jnp.zeros(l, jnp.float32),
+             jnp.full(l, -1, jnp.int32), jnp.int32(0)),
+            (types0, sizes0, init_keys))
         need0 = sizes0 / mu[types0, proc0]
 
         state = (key, jnp.float32(0.0), proc0, need0, need0, sizes0,
                  jnp.zeros(n, jnp.float32), jnp.arange(n, dtype=jnp.int32),
-                 counts0, jnp.float32(0.0), jnp.float32(0.0),
-                 jnp.float32(0.0), jnp.float32(0.0),
-                 jnp.zeros((k, l), jnp.float32))
+                 counts0, jnp.float32(0.0),
+                 jnp.zeros(n_cls, jnp.float32), jnp.zeros(n_cls, jnp.float32),
+                 jnp.zeros(n_cls, jnp.float32), jnp.float32(0.0),
+                 jnp.zeros((k, l), jnp.float32), types0, run0)
 
         def step(state, i):
             (key, now, proc, remaining, need, size_left, entry, stamp,
-             counts, t_start, sum_resp, sum_energy, sum_power, occ) = state
-            mask = proc[:, None] == jnp.arange(l)[None, :]       # (n, l)
+             counts, t_start, resp_c, energy_c, meas_c, sum_power, occ,
+             types, run_pid) = state
+            mask = proc[:, None] == cols[None, :]                # (n, l)
             cnt = mask.sum(0)
             cntf = cnt.astype(jnp.float32)
             if order_ps:
                 rem_col = jnp.where(mask, remaining[:, None], jnp.inf)
                 dtj = jnp.where(cnt > 0, rem_col.min(0) * cntf, jnp.inf)
                 # occupancy-weighted draw: each resident burns P/c_j
-                pw = (P[types0, proc] / cntf[proc]).sum()
+                pw = (P[types, proc] / cntf[proc]).sum()
+            elif order_prio:
+                rp = jnp.maximum(run_pid, 0)
+                dtj = jnp.where(cnt > 0, remaining[rp], jnp.inf)
+                pw = jnp.where(cnt > 0, P[types[rp], cols], 0.0).sum()
             else:
                 stamp_col = jnp.where(mask, stamp[:, None], _BIG_STAMP)
                 head = jnp.argmin(stamp_col, axis=0)             # (l,)
                 dtj = jnp.where(cnt > 0, remaining[head], jnp.inf)
                 # heads run alone at full rate; idle columns draw nothing
-                pw = jnp.where(cnt > 0,
-                               P[types0[head], jnp.arange(l)], 0.0).sum()
+                pw = jnp.where(cnt > 0, P[types[head], cols], 0.0).sum()
             j_star = jnp.argmin(dtj)
             dt = dtj[j_star]
             now = now + dt
@@ -147,8 +201,13 @@ def _simulate_fleet(mu, P, target, rank, types0, keys, modes, *, order,
                 dep = dt / cntf[proc]                            # (n,)
                 remaining = remaining - dep
                 pid = jnp.argmin(jnp.where(proc == j_star, remaining, jnp.inf))
+            elif order_prio:
+                is_run = run_pid[proc] == idx_n
+                dep = jnp.where(is_run, dt, 0.0)
+                remaining = remaining - dep
+                pid = run_pid[j_star]
             else:
-                is_head = jnp.arange(n, dtype=jnp.int32) == head[proc]
+                is_head = idx_n == head[proc]
                 dep = jnp.where(is_head, dt, 0.0)
                 remaining = remaining - dep
                 pid = head[j_star]
@@ -157,61 +216,92 @@ def _simulate_fleet(mu, P, target, rank, types0, keys, modes, *, order,
             frac = jnp.where(need > 0, dep / need, 1.0)
             size_left = jnp.maximum(size_left - frac * size_left, 0.0)
 
-            t = types0[pid]
+            t = types[pid]
             in_win = i >= warmup
+            winf = jnp.where(in_win, 1.0, 0.0)
             occ = occ + jnp.where(in_win, dt, 0.0) * counts.astype(jnp.float32)
             counts = counts.at[t, j_star].add(-1)
-            sum_resp = sum_resp + jnp.where(in_win, now - entry[pid], 0.0)
-            sum_energy = sum_energy + jnp.where(
-                in_win, P[t, j_star] * need[pid], 0.0)
+            c = cls_arr[t]
+            resp_c = resp_c.at[c].add(winf * (now - entry[pid]))
+            energy_c = energy_c.at[c].add(winf * P[t, j_star] * need[pid])
+            meas_c = meas_c.at[c].add(winf)
             sum_power = sum_power + jnp.where(in_win, dt, 0.0) * pw
             t_start = jnp.where(i == warmup - 1, now, t_start)
+
+            if order_prio:
+                # next head: oldest waiting (smallest stamp) of the best
+                # class present on j_star, excluding the completed task
+                waiting = (proc == j_star) & (idx_n != pid)
+                pkey = cls_arr[types] * stamp_cap + stamp
+                nxt = jnp.argmin(jnp.where(waiting, pkey, _BIG_STAMP))
+                run_pid = run_pid.at[j_star].set(
+                    jnp.where(waiting.any(), nxt.astype(jnp.int32), -1))
 
             # closed system: the program's next task routes immediately (the
             # completed task is gone from the LB backlog, like the host view)
             size_left = size_left.at[pid].set(0.0)
-            backlog = jnp.where(mask, size_left[:, None], 0.0).sum(0)
-            j_new = route_one(counts, backlog, t)
-            counts = counts.at[t, j_new].add(1)
             key, sub = jax.random.split(key)
-            s_new = sample(sub)
-            sn = s_new / mu[t, j_new]
+            if has_mix:
+                t_new = jax.random.categorical(
+                    jax.random.fold_in(sub, 2), logp).astype(jnp.int32)
+            else:
+                t_new = t
+            types = types.at[pid].set(t_new)
+            backlog = jnp.where(mask, size_left[:, None], 0.0).sum(0)
+            j_new = route_one(counts, backlog, t_new,
+                              jax.random.fold_in(sub, 1))
+            counts = counts.at[t_new, j_new].add(1)
+            s_new = sample_for(sub, t_new)
+            sn = s_new / mu[t_new, j_new]
             remaining = remaining.at[pid].set(sn)
             need = need.at[pid].set(sn)
             size_left = size_left.at[pid].set(s_new)
             entry = entry.at[pid].set(now)
             proc = proc.at[pid].set(j_new)
             stamp = stamp.at[pid].set(n + i)
+            if order_prio:
+                run_pid = run_pid.at[j_new].set(
+                    jnp.where(run_pid[j_new] < 0, pid, run_pid[j_new]))
             return (key, now, proc, remaining, need, size_left, entry, stamp,
-                    counts, t_start, sum_resp, sum_energy, sum_power,
-                    occ), None
+                    counts, t_start, resp_c, energy_c, meas_c, sum_power,
+                    occ, types, run_pid), None
 
         state, _ = jax.lax.scan(step, state,
                                 jnp.arange(n_steps, dtype=jnp.int32))
-        (_, now, _, _, _, _, _, _, _, t_start, sum_resp, sum_energy,
-         sum_power, occ) = state
+        (_, now, _, _, _, _, _, _, _, t_start, resp_c, energy_c, meas_c,
+         sum_power, occ, _, _) = state
         measured = jnp.float32(n_steps - warmup)
         elapsed = now - t_start
         x = measured / elapsed
-        return (x, sum_resp / measured, sum_energy / measured, elapsed,
-                occ / elapsed, sum_power / elapsed)
+        return (x, resp_c.sum() / measured, energy_c.sum() / measured,
+                elapsed, occ / elapsed, sum_power / elapsed, meas_c, resp_c,
+                energy_c)
 
-    return jax.vmap(one)(mu, P, target, rank, types0, keys, modes)
+    return jax.vmap(one)(mu, P, target, rank, types0, keys, modes, mix_probs)
 
 
 def simulate_batch(mu, targets, types0, seeds, *, distribution, order="PS",
                    n_completions, warmup_completions,
-                   power: PowerModel = PROPORTIONAL_POWER, modes=None):
+                   power: PowerModel = PROPORTIONAL_POWER, modes=None,
+                   class_of_type=None, class_distributions=None,
+                   type_mix=None):
     """Simulate B closed networks in one device call.
 
     mu: (k, l) shared or (B, k, l) per-point; targets: (B, k, l) pinned
     placements; types0: (B, n) initial program types; seeds: (B,) ints;
-    modes: (B,) route modes (MODE_DEFICIT default, MODE_JSQ, MODE_LB —
-    baseline points ignore their target rows).
+    modes: (B,) route modes (MODE_DEFICIT default, MODE_JSQ, MODE_LB,
+    MODE_RD, MODE_BF — baseline points ignore their target rows).
+    `class_of_type` ((k,) type -> priority class, class 0 highest) selects
+    the per-class metric split and the PRIO service order's class ranking;
+    `class_distributions` (len C) gives per-class task sizes; `type_mix`
+    ((k,) or (B, k) probabilities) re-draws each completed program's next
+    type on device (piecewise-closed operation).
     Returns a dict of NumPy arrays: throughput/mean_response_time/mean_energy
     /edp/little_product/mean_power (B,), elapsed (B,), state_occupancy
-    (B, k, l); mean_power is the occupancy-weighted P_ij integral over the
-    measurement window divided by elapsed (mean_power / throughput is the
+    (B, k, l), plus the per-class split class_throughput/
+    class_response_time/class_energy (B, C) and class_occupancy (B, C, l);
+    mean_power is the occupancy-weighted P_ij integral over the measurement
+    window divided by elapsed (mean_power / throughput is the
     trajectory-measured E[E], eq. 19).
     """
     targets = np.asarray(targets)
@@ -225,10 +315,32 @@ def simulate_batch(mu, targets, types0, seeds, *, distribution, order="PS",
         raise ValueError(f"types0 must be (B, n); got {types0.shape}")
     if not 0 <= warmup_completions < n_completions:
         raise ValueError("need 0 <= warmup_completions < n_completions")
+    if order not in ("PS", "FCFS", "PRIO"):
+        raise ValueError(f"unknown order {order!r}: PS | FCFS | PRIO")
     modes = (np.zeros(B, dtype=np.int32) if modes is None
              else np.asarray(modes, dtype=np.int32))
-    if modes.shape != (B,) or modes.min() < 0 or modes.max() > MODE_LB:
-        raise ValueError(f"modes must be (B,) ints in [0, {MODE_LB}]")
+    if modes.shape != (B,) or modes.min() < 0 or modes.max() > MODE_BF:
+        raise ValueError(f"modes must be (B,) ints in [0, {MODE_BF}]")
+    cls = (np.zeros(k, dtype=np.int64) if class_of_type is None
+           else np.asarray(class_of_type, dtype=np.int64))
+    if cls.shape != (k,) or cls.min() < 0:
+        raise ValueError(f"class_of_type must be (k,) nonneg ints; got "
+                         f"{class_of_type!r}")
+    C = int(cls.max()) + 1
+    if class_distributions is not None:
+        if len(class_distributions) != C:
+            raise ValueError(f"need {C} class_distributions; got "
+                             f"{len(class_distributions)}")
+        dist_specs = tuple(_dist_spec(d) for d in class_distributions)
+    else:
+        dist_specs = (_dist_spec(distribution),)
+    if type_mix is None:
+        has_mix = False
+        mix_probs = np.zeros((B, k), dtype=np.float64)
+    else:
+        has_mix = True
+        mix_probs = np.broadcast_to(
+            np.asarray(type_mix, dtype=np.float64), (B, k))
     if mu.ndim == 2:                # shared mu: derive P/ranks once, tile
         P = np.broadcast_to(power.power_matrix(mu), (B, k, l))
         ranks = np.broadcast_to(_mu_tiebreak_ranks(mu), (B, k, l))
@@ -236,26 +348,55 @@ def simulate_batch(mu, targets, types0, seeds, *, distribution, order="PS",
         P = np.stack([power.power_matrix(m) for m in mus])
         ranks = np.stack([_mu_tiebreak_ranks(m) for m in mus])
     keys = np.stack([np.asarray(jax.random.PRNGKey(int(s))) for s in seeds])
-    x, et, ee, elapsed, occ, pw = _simulate_fleet(
+    x, et, ee, elapsed, occ, pw, meas_c, resp_c, energy_c = _simulate_fleet(
         jnp.asarray(mus, jnp.float32), jnp.asarray(P, jnp.float32),
         jnp.asarray(targets, jnp.int32), jnp.asarray(ranks), types0,
-        jnp.asarray(keys), jnp.asarray(modes), order=order,
-        dist_spec=_dist_spec(distribution),
-        n_steps=int(n_completions), warmup=int(warmup_completions))
+        jnp.asarray(keys), jnp.asarray(modes),
+        jnp.asarray(mix_probs, jnp.float32), order=order,
+        dist_specs=dist_specs, n_steps=int(n_completions),
+        warmup=int(warmup_completions), cls_of=tuple(int(c) for c in cls),
+        has_mix=has_mix)
     x, et, ee, pw = (np.asarray(v, np.float64) for v in (x, et, ee, pw))
     occ = np.asarray(occ, np.float64)
+    meas_c, resp_c, energy_c = (np.asarray(v, np.float64)
+                                for v in (meas_c, resp_c, energy_c))
+    elapsed_np = np.asarray(elapsed, np.float64)
     if warmup_completions == 0:
         occ = np.zeros_like(occ)    # host convention: warmup==0 tracks none
         pw = np.zeros_like(pw)      # mean_power follows the occ window
+    with np.errstate(divide="ignore", invalid="ignore"):
+        cls_x = meas_c / elapsed_np[:, None]
+        cls_rt = np.where(meas_c > 0, resp_c / np.maximum(meas_c, 1.0),
+                          np.inf)
+        cls_ee = np.where(meas_c > 0, energy_c / np.maximum(meas_c, 1.0),
+                          np.inf)
+    cls_occ = np.zeros((B, C, l))
+    np.add.at(cls_occ, (slice(None), cls), occ)
     return {"throughput": x, "mean_response_time": et, "mean_energy": ee,
             "edp": ee * et, "little_product": x * et,
             "completed": np.full(B, n_completions - warmup_completions),
-            "elapsed": np.asarray(elapsed, np.float64),
-            "state_occupancy": occ, "mean_power": pw}
+            "elapsed": elapsed_np,
+            "state_occupancy": occ, "mean_power": pw,
+            "class_throughput": cls_x, "class_response_time": cls_rt,
+            "class_energy": cls_ee, "class_occupancy": cls_occ}
 
 
 def _types0_for(mix: np.ndarray) -> np.ndarray:
     return np.repeat(np.arange(len(mix)), mix).astype(np.int32)
+
+
+def _cfg_mix_and_types0(cfg, seed: int | None = None):
+    """(pinned mix, initial types) for a config: fixed populations repeat
+    the per-type counts; `type_mix` configs draw the initial types exactly
+    like the host core (same NumPy generator, same first draw) and pin the
+    EXPECTED mix for target solving."""
+    base = np.asarray(cfg.n_programs_per_type, dtype=np.int64)
+    if cfg.type_mix is None:
+        return base, _types0_for(base)
+    n = int(base.sum())
+    rng = np.random.default_rng(cfg.seed if seed is None else seed)
+    t0 = rng.choice(len(base), size=n, p=cfg.type_mix).astype(np.int32)
+    return _expected_mix(cfg.type_mix, n), t0
 
 
 def _device_route_mode(pol) -> int:
@@ -266,27 +407,26 @@ def _device_route_mode(pol) -> int:
     if mode is None:
         raise ValueError(
             f"{pol.name} routes on a SystemView with no on-device variant "
-            "(only LB/JSQ have one); use the host simulator")
+            "(only LB/JSQ/RD/BF have one); use the host simulator")
     return mode
 
 
 def simulate_policy_jax(cfg, core) -> "SimMetrics":
     """Device-engine replacement for `ClosedNetworkSimulator.run` for one
-    target-policy (or LB/JSQ baseline) config with fixed populations."""
-    from repro.sim.simulator import SimMetrics
-    if cfg.type_mix is not None:
-        raise ValueError("piecewise type_mix runs on the host core")
+    target-policy (or on-device baseline) config. `type_mix` configs pin
+    the deficit target at the expected mix and re-draw types on device."""
     mu = np.asarray(cfg.mu, dtype=np.float64)
-    mix = np.asarray(cfg.n_programs_per_type, dtype=np.int64)
+    mix, t0 = _cfg_mix_and_types0(cfg)
     mode = _device_route_mode(core.policy)
     target = (np.asarray(core.policy.solve_target(mu, mix))
               if mode == MODE_DEFICIT else np.zeros(mu.shape, np.int64))
     out = simulate_batch(
-        mu, target[None], _types0_for(mix)[None], [cfg.seed],
+        mu, target[None], t0[None], [cfg.seed],
         distribution=cfg.distribution, order=cfg.order,
         n_completions=cfg.n_completions,
         warmup_completions=cfg.warmup_completions, power=cfg.power,
-        modes=[mode])
+        modes=[mode], class_of_type=cfg.class_of_type,
+        class_distributions=cfg.class_distributions, type_mix=cfg.type_mix)
     return _metrics_row(out, 0)
 
 
@@ -301,7 +441,11 @@ def _metrics_row(out: dict, i: int) -> "SimMetrics":
         completed=int(out["completed"][i]),
         elapsed=float(out["elapsed"][i]),
         state_occupancy=out["state_occupancy"][i],
-        mean_power=float(out["mean_power"][i]))
+        mean_power=float(out["mean_power"][i]),
+        class_throughput=out["class_throughput"][i],
+        class_response_time=out["class_response_time"][i],
+        class_energy=out["class_energy"][i],
+        class_occupancy=out["class_occupancy"][i])
 
 
 def sweep_jax(cfg, policy, *, mixes=None, seeds=None, mus=None):
@@ -311,17 +455,21 @@ def sweep_jax(cfg, policy, *, mixes=None, seeds=None, mus=None):
     batch-static program count); `mus` (G, k, l) batches affinity matrices
     (elastic what-if); `seeds` (S,) replicates. Targets re-solve per
     (mu, mix) — the whole grid in one `solve_targets_grid_jax` call when the
-    policy batches on device. LB/JSQ run as on-device baseline modes (their
-    target rows are zeros). Returns (grid, results): `grid` is a list of
-    (mu_index, mix, seed) per point and `results` the `simulate_batch` dict
-    over the B = G*M*S points.
+    policy batches on device (under the policy's `device_mu` matrix and
+    objective, so priority / energy policies solve their own objective).
+    LB/JSQ/RD/BF run as on-device baseline modes (their target rows are
+    zeros). `type_mix` configs run natively (expected-mix targets, on-device
+    re-draw) but cannot combine with a `mixes` grid. Returns (grid, results):
+    `grid` is a list of (mu_index, mix, seed) per point and `results` the
+    `simulate_batch` dict over the B = G*M*S points.
     """
     from repro.sched.api import get_policy
     pol = get_policy(policy)
     mode = _device_route_mode(pol)
-    if cfg.type_mix is not None:
-        raise ValueError("piecewise type_mix runs on the host core")
-    base_mix = np.asarray(cfg.n_programs_per_type, dtype=np.int64)
+    if cfg.type_mix is not None and mixes is not None:
+        raise ValueError("a mixes grid needs fixed populations; this config "
+                         "re-draws types from type_mix")
+    base_mix, _ = _cfg_mix_and_types0(cfg)
     mixes = base_mix[None] if mixes is None else np.asarray(mixes, np.int64)
     if (mixes.sum(axis=1) != base_mix.sum()).any():
         raise ValueError("all mixes must keep the closed population "
@@ -334,7 +482,11 @@ def sweep_jax(cfg, policy, *, mixes=None, seeds=None, mus=None):
         per_mu_targets = np.zeros(
             (len(mus), len(mixes)) + mus.shape[1:], dtype=np.int64)
     elif pol.supports_jax_batch:
-        per_mu_targets, _, _ = solve_targets_grid_jax(mus, mixes)
+        from repro.sched.api import physical_power_matrix
+        per_mu_targets, _, _ = solve_targets_grid_jax(
+            np.stack([pol.device_mu(m) for m in mus]), mixes,
+            objective=pol.jax_objective, power=pol.power,
+            P=physical_power_matrix(pol, mus))
     else:
         per_mu_targets = np.stack([
             np.stack([np.asarray(pol.solve_target(m, mix)) for mix in mixes])
@@ -343,8 +495,9 @@ def sweep_jax(cfg, policy, *, mixes=None, seeds=None, mus=None):
     grid, mu_b, tgt_b, types_b, seed_b = [], [], [], [], []
     for gi, (m, targets) in enumerate(zip(mus, per_mu_targets)):
         for mix, target in zip(mixes, targets):
-            t0 = _types0_for(mix)
             for s in seeds:
+                _, t0 = _cfg_mix_and_types0(cfg, seed=int(s)) \
+                    if cfg.type_mix is not None else (mix, _types0_for(mix))
                 grid.append((gi, mix.copy(), int(s)))
                 mu_b.append(m)
                 tgt_b.append(target)
@@ -357,7 +510,9 @@ def sweep_jax(cfg, policy, *, mixes=None, seeds=None, mus=None):
         distribution=cfg.distribution, order=cfg.order,
         n_completions=cfg.n_completions,
         warmup_completions=cfg.warmup_completions, power=cfg.power,
-        modes=np.full(len(grid), mode, dtype=np.int32))
+        modes=np.full(len(grid), mode, dtype=np.int32),
+        class_of_type=cfg.class_of_type,
+        class_distributions=cfg.class_distributions, type_mix=cfg.type_mix)
     return grid, results
 
 
@@ -365,17 +520,15 @@ def compare_policies_jax(cfg, policies, seeds=None) -> dict:
     """Fig. 9-style policy comparison as ONE batched device call.
 
     Every target policy (deficit routing toward its solved N*) and the
-    LB/JSQ on-device baselines simulate side by side in a single
-    `simulate_batch`; RD/BF and custom choosers raise (host-only). Returns
+    LB/JSQ/RD/BF on-device baselines simulate side by side in a single
+    `simulate_batch`; custom SystemView choosers raise (host-only). Returns
     {display name: SimMetrics} — or {name: [SimMetrics per seed]} when
     `seeds` is given. Duplicate display names disambiguate as in
     `run_policy_sweep` ("Opt", "Opt#2", ...).
     """
     from repro.sched.api import as_core
-    if cfg.type_mix is not None:
-        raise ValueError("piecewise type_mix runs on the host core")
     mu = np.asarray(cfg.mu, dtype=np.float64)
-    mix = np.asarray(cfg.n_programs_per_type, dtype=np.int64)
+    mix, _ = _cfg_mix_and_types0(cfg)
     single = seeds is None
     seed_list = [int(cfg.seed)] if single else [int(s) for s in seeds]
     names, tgts, modes = [], [], []
@@ -390,15 +543,18 @@ def compare_policies_jax(cfg, policies, seeds=None) -> dict:
         tgts.append(np.asarray(c.policy.solve_target(mu, mix))
                     if mode == MODE_DEFICIT
                     else np.zeros(mu.shape, np.int64))
-    t0 = _types0_for(mix)
     S = len(seed_list)
+    types_b = [_cfg_mix_and_types0(cfg, seed=s)[1]
+               if cfg.type_mix is not None else _types0_for(mix)
+               for s in seed_list]
     out = simulate_batch(
         mu, np.stack([t for t in tgts for _ in range(S)]),
-        np.tile(t0, (len(names) * S, 1)), seed_list * len(names),
+        np.stack(types_b * len(names)), seed_list * len(names),
         distribution=cfg.distribution, order=cfg.order,
         n_completions=cfg.n_completions,
         warmup_completions=cfg.warmup_completions, power=cfg.power,
-        modes=np.repeat(modes, S))
+        modes=np.repeat(modes, S), class_of_type=cfg.class_of_type,
+        class_distributions=cfg.class_distributions, type_mix=cfg.type_mix)
     rows = {name: [_metrics_row(out, i * S + s) for s in range(S)]
             for i, name in enumerate(names)}
     return {k: v[0] for k, v in rows.items()} if single else rows

@@ -4,11 +4,22 @@ Model: N programs; each program is an endless sequence of tasks. The system
 always holds exactly N in-flight tasks; when a task completes, the program's
 next task enters immediately and the dispatcher routes it (closed system).
 
-Processing orders (both work-conserving, per Lemma 3):
+Processing orders (all work-conserving, per Lemma 3):
   * PS   — processor j serves its n_j resident tasks simultaneously; each
            task's remaining "alone time" r = s / mu[i, j] depletes at rate
            1 / n_j wall-seconds per second.
   * FCFS — head-of-line task runs at full rate; the rest wait.
+  * PRIO — strict-priority, preemption-free (arXiv:1712.03246): the running
+           task always finishes; the next to run is the oldest waiting task
+           of the highest-priority class present (class 0 first). With a
+           single class this is exactly FCFS.
+
+Priority classes: `SimConfig.class_of_type` maps each task-type row of mu
+to a class c in {0..C-1}; both engines then report per-class throughput,
+response time, energy and occupancy in `SimMetrics` (single-class configs
+get the C == 1 reductions). `class_distributions` gives each class its own
+task-size distribution. The priority subsystem (`repro.sched.priority`)
+builds these flattened configs from (C, k) per-class mixes.
 
 Energy: a size-s i-type task on processor j occupies the processor for
 s / mu[i, j] dedicated seconds in either order, so task energy is
@@ -55,7 +66,7 @@ class SimConfig:
     mu: np.ndarray                      # (k, l) affinity matrix
     n_programs_per_type: np.ndarray     # (k,) programs whose tasks are type i
     distribution: TaskSizeDistribution
-    order: str = "PS"                   # "PS" | "FCFS"
+    order: str = "PS"                   # "PS" | "FCFS" | "PRIO"
     power: PowerModel = dataclasses.field(default_factory=lambda: PROPORTIONAL_POWER)
     n_completions: int = 20_000
     warmup_completions: int = 2_000
@@ -63,6 +74,13 @@ class SimConfig:
     # If set, each new task's type is re-drawn iid with these probabilities
     # (piecewise-closed operation; dispatchers are notified of mix changes).
     type_mix: np.ndarray | None = None
+    # Priority classes: class id (0 = highest priority) of each task-type
+    # row; None = every type is class 0. Drives the per-class SimMetrics
+    # and the PRIO service order.
+    class_of_type: np.ndarray | None = None
+    # Per-class task-size distributions (len C); None = `distribution` for
+    # every class.
+    class_distributions: tuple | None = None
 
 
 @dataclasses.dataclass
@@ -76,10 +94,19 @@ class SimMetrics:
     elapsed: float
     state_occupancy: np.ndarray         # time-averaged N_ij
     # Occupancy-weighted power draw over the measurement window: the time
-    # integral of sum_j W_j (PS: W_j = sum_i N_ij P_ij / c_j; FCFS: the
-    # head's P) divided by elapsed. mean_power / throughput is the model's
-    # E[E] (eq. 19) measured from the trajectory rather than per completion.
+    # integral of sum_j W_j (PS: W_j = sum_i N_ij P_ij / c_j; FCFS/PRIO: the
+    # running head's P) divided by elapsed. mean_power / throughput is the
+    # model's E[E] (eq. 19) measured from the trajectory rather than per
+    # completion.
     mean_power: float = 0.0
+    # Per-priority-class metrics (C,) / (C, l); the C == 1 reductions for
+    # single-class configs. class_throughput sums to `throughput`, and
+    # sum_c w_c * class_throughput[c] is the class-weighted X the priority
+    # solvers maximize.
+    class_throughput: np.ndarray | None = None
+    class_response_time: np.ndarray | None = None
+    class_energy: np.ndarray | None = None
+    class_occupancy: np.ndarray | None = None
 
 
 class ClosedNetworkSimulator:
@@ -91,6 +118,19 @@ class ClosedNetworkSimulator:
         self.mu = np.asarray(cfg.mu, dtype=np.float64)
         self.k, self.l = self.mu.shape
         self.P = cfg.power.power_matrix(self.mu)
+        if cfg.order not in ("PS", "FCFS", "PRIO"):
+            raise ValueError(f"unknown order {cfg.order!r}: PS | FCFS | PRIO")
+        self.cls = (np.zeros(self.k, dtype=np.int64)
+                    if cfg.class_of_type is None
+                    else np.asarray(cfg.class_of_type, dtype=np.int64))
+        if self.cls.shape != (self.k,) or self.cls.min() < 0:
+            raise ValueError(f"class_of_type must be (k={self.k},) nonneg "
+                             f"ints; got {cfg.class_of_type!r}")
+        self.n_classes = int(self.cls.max()) + 1
+        if (cfg.class_distributions is not None
+                and len(cfg.class_distributions) != self.n_classes):
+            raise ValueError(f"need {self.n_classes} class_distributions; "
+                             f"got {len(cfg.class_distributions)}")
 
     def run(self, policy: str | Policy | SchedulerCore) -> SimMetrics:
         """Simulate under a policy: a registry name ("cab", "grin", "lb",
@@ -112,6 +152,10 @@ class ClosedNetworkSimulator:
         n_per_type = np.asarray(cfg.n_programs_per_type, dtype=np.int64)
         n_prog = int(n_per_type.sum())
         order_ps = cfg.order == "PS"
+        order_prio = cfg.order == "PRIO"
+        cls_l = self.cls.tolist()
+        C = self.n_classes
+        cdists = cfg.class_distributions
 
         task_type = np.repeat(np.arange(self.k), n_per_type)
         if cfg.type_mix is not None:
@@ -124,15 +168,17 @@ class ClosedNetworkSimulator:
             mix_counts = None
         task_type = task_type.tolist()
 
-        # Sizes: with the mix fixed and a target policy, the distribution is
-        # the only consumer of `rng`, so block draws are stream-identical to
-        # per-admission draws (verified for every registry distribution).
+        # Sizes: with the mix fixed, a single distribution and a target
+        # policy, the distribution is the only consumer of `rng`, so block
+        # draws are stream-identical to per-admission draws (verified for
+        # every registry distribution). Per-class distributions interleave
+        # draws by class, so they draw per admission like the mix case.
         dist = cfg.distribution
-        if mix_counts is None:
+        if mix_counts is None and cdists is None:
             size_buf = dist.sample(rng, _SIZE_BLOCK).tolist()
             size_ptr = 0
         else:
-            size_buf = None                     # rng.choice interleaves
+            size_buf = None                     # interleaved draws
             size_ptr = 0
 
         service_need = [0.0] * n_prog
@@ -143,9 +189,20 @@ class ClosedNetworkSimulator:
         # PS: per-proc completions sorted ASC by (-finish, -seq): the tail is
         # the earliest finisher with ties broken toward the earliest
         # admission, exactly the original list-order argmin. FCFS: FIFO.
+        # PRIO: one FIFO per class per proc + the sticky running head
+        # (preemption-free: an arriving high-priority task waits for the
+        # running task to finish, then jumps every lower class).
         ps_q: list[list] = [[] for _ in range(l)]
         fifo: list[deque] = [deque() for _ in range(l)]
+        prio_q: list[list] = [[deque() for _ in range(C)] for _ in range(l)]
+        running = [-1] * l
         seq = 0
+
+        # Per-priority-class accumulators (the totals keep their own scalar
+        # accumulators so single-class sums stay bit-identical to pre-PR).
+        cls_meas = [0] * C
+        cls_resp = [0.0] * C
+        cls_energy = [0.0] * C
 
         # O(1)-per-event occupancy: integrate each (type, proc) cell on
         # change; cnt_rows mirrors core's counts cheaply on the sim side.
@@ -170,7 +227,8 @@ class ClosedNetworkSimulator:
             t = task_type[pid]
             j = route(t)
             if size_buf is None:
-                s = float(dist.sample(rng, 1)[0])
+                d = dist if cdists is None else cdists[cls_l[t]]
+                s = float(d.sample(rng, 1)[0])
             else:
                 if size_ptr == _SIZE_BLOCK:
                     size_buf = dist.sample(rng, _SIZE_BLOCK).tolist()
@@ -185,6 +243,14 @@ class ClosedNetworkSimulator:
                 pw_num[j] += P_rows[t][j]
                 pw_sum += pw_num[j] / (n_res[j] + 1) - old
                 insort(ps_q[j], (-(V[j] + sn), -seq, pid))
+            elif order_prio:
+                if running[j] < 0:          # idle: start immediately
+                    running[j] = pid
+                    head_pw[j] = P_rows[t][j]
+                    pw_sum += head_pw[j]
+                else:                       # no preemption: queue by class
+                    prio_q[j][cls_l[t]].append(pid)
+                remaining[pid] = sn
             else:
                 if not fifo[j]:
                     head_pw[j] = P_rows[t][j]
@@ -222,6 +288,13 @@ class ClosedNetworkSimulator:
                         dt = (-q[-1][0] - V[j]) * n_res[j]
                         if dt < best_dt:
                             best_dt, best_j = dt, j
+            elif order_prio:
+                for j in range(l):
+                    r = running[j]
+                    if r >= 0:
+                        dt = remaining[r]
+                        if dt < best_dt:
+                            best_dt, best_j = dt, j
             else:
                 for j in range(l):
                     q = fifo[j]
@@ -241,6 +314,12 @@ class ClosedNetworkSimulator:
                     if r:
                         V[jj] += best_dt / r
                 pid = ps_q[j].pop()[2]
+            elif order_prio:
+                for jj in range(l):
+                    r = running[jj]
+                    if r >= 0:
+                        remaining[r] -= best_dt
+                pid = running[j]
             else:
                 for jj in range(l):
                     q = fifo[jj]
@@ -255,6 +334,17 @@ class ClosedNetworkSimulator:
                 old = pw_num[j] / (n_res[j] + 1)
                 pw_num[j] -= P_rows[t][j]
                 pw_sum += (pw_num[j] / n_res[j] if n_res[j] else 0.0) - old
+            elif order_prio:
+                # next to run: oldest waiting task of the best class present
+                pw_sum -= head_pw[j]
+                nxt = -1
+                for qc in prio_q[j]:
+                    if qc:
+                        nxt = qc.popleft()
+                        break
+                running[j] = nxt
+                head_pw[j] = P_rows[task_type[nxt]][j] if nxt >= 0 else 0.0
+                pw_sum += head_pw[j]
             else:
                 pw_sum -= head_pw[j]
                 q = fifo[j]
@@ -279,8 +369,14 @@ class ClosedNetworkSimulator:
                         li[jj] = now
             elif in_window:
                 measured += 1
-                sum_resp += now - entry_time[pid]
-                sum_energy += P_rows[t][j] * service_need[pid]
+                resp = now - entry_time[pid]
+                energy = P_rows[t][j] * service_need[pid]
+                sum_resp += resp
+                sum_energy += energy
+                c = cls_l[t]
+                cls_meas[c] += 1
+                cls_resp[c] += resp
+                cls_energy[c] += energy
 
             # ---- the program's next task enters immediately (closed) ----
             if mix_counts is not None:
@@ -301,7 +397,8 @@ class ClosedNetworkSimulator:
             occupancy[:] = 0.0      # pre-refactor quirk: warmup==0 tracks none
             power_int = 0.0         # power window follows the occ convention
         return self._metrics(measured, now - t_measure_start, sum_resp,
-                             sum_energy, occupancy, power_int)
+                             sum_energy, occupancy, power_int,
+                             cls_meas, cls_resp, cls_energy)
 
     # ------------------------------------------------------------------
     # Compat path: SystemView policies (LB/JSQ/RD/BF and custom choosers).
@@ -326,6 +423,13 @@ class ClosedNetworkSimulator:
         service_need = np.zeros(n_prog)     # total alone-seconds (for energy)
 
         proc_tasks: list[list[int]] = [[] for _ in range(self.l)]  # FCFS order
+        order_prio = cfg.order == "PRIO"
+        running = [-1] * self.l             # PRIO: sticky head per processor
+        cls_l = self.cls.tolist()
+        cdists = cfg.class_distributions
+        cls_meas = [0] * self.n_classes
+        cls_resp = [0.0] * self.n_classes
+        cls_energy = [0.0] * self.n_classes
 
         mix0 = (n_per_type if cfg.type_mix is None
                 else np.bincount(task_type, minlength=self.k))
@@ -348,13 +452,16 @@ class ClosedNetworkSimulator:
             t = int(task_type[pid])
             j = core.route(t, view=view(), rng=rng)
             counts[t, j] += 1
-            s = float(cfg.distribution.sample(rng, 1)[0])
+            d = cfg.distribution if cdists is None else cdists[cls_l[t]]
+            s = float(d.sample(rng, 1)[0])
             task_proc[pid] = j
             service_need[pid] = s / self.mu[t, j]
             remaining[pid] = service_need[pid]
             size_left[pid] = s
             entry_time[pid] = now
             proc_tasks[j].append(pid)
+            if order_prio and running[j] < 0:
+                running[j] = pid
 
         for pid in range(n_prog):
             admit(pid, 0.0)
@@ -379,6 +486,8 @@ class ClosedNetworkSimulator:
                 if cfg.order == "PS":
                     arr = remaining[np.asarray(ids)]
                     dt = arr.min() * len(ids)
+                elif order_prio:    # sticky head runs alone, no preemption
+                    dt = remaining[running[j]]
                 else:  # FCFS: head of line runs alone
                     dt = remaining[ids[0]]
                 if dt < best_dt:
@@ -397,6 +506,8 @@ class ClosedNetworkSimulator:
                     if cfg.order == "PS":
                         draw += sum(self.P[task_type[i], jj]
                                     for i in ids) / len(ids)
+                    elif order_prio:
+                        draw += self.P[task_type[running[jj]], jj]
                     else:
                         draw += self.P[task_type[ids[0]], jj]
                 power_int += best_dt * draw
@@ -417,22 +528,31 @@ class ClosedNetworkSimulator:
                     size_left[idx] = np.maximum(
                         size_left[idx] - frac * size_left[idx], 0.0)
                 else:
-                    remaining[ids[0]] -= best_dt
+                    head = running[jj] if order_prio else ids[0]
+                    remaining[head] -= best_dt
                     # head's size depletes linearly
-                    if service_need[ids[0]] > 0:
-                        size_left[ids[0]] = max(
-                            size_left[ids[0]]
-                            - best_dt / service_need[ids[0]] * size_left[ids[0]],
+                    if service_need[head] > 0:
+                        size_left[head] = max(
+                            size_left[head]
+                            - best_dt / service_need[head] * size_left[head],
                             0.0)
 
             # ---- complete the finished task on processor j ----
             if cfg.order == "PS":
                 ids = np.asarray(proc_tasks[j])
                 pid = int(ids[np.argmin(remaining[ids])])
+            elif order_prio:
+                pid = running[j]
             else:
                 pid = proc_tasks[j][0]
             t = int(task_type[pid])
             proc_tasks[j].remove(pid)
+            if order_prio:
+                # next head: oldest (admission order) of the best class
+                # present — min() returns the first minimum
+                ids = proc_tasks[j]
+                running[j] = (min(ids, key=lambda q: cls_l[task_type[q]])
+                              if ids else -1)
             core.complete(t, j)
             counts[t, j] -= 1
             completed += 1
@@ -445,8 +565,14 @@ class ClosedNetworkSimulator:
                 power_int = 0.0
             if in_window:
                 measured += 1
-                sum_resp += now - entry_time[pid]
-                sum_energy += self.P[t, j] * service_need[pid]
+                resp = now - entry_time[pid]
+                energy = self.P[t, j] * service_need[pid]
+                sum_resp += resp
+                sum_energy += energy
+                c = cls_l[t]
+                cls_meas[c] += 1
+                cls_resp[c] += resp
+                cls_energy[c] += energy
 
             # ---- the program's next task enters immediately (closed) ----
             if cfg.type_mix is not None:
@@ -459,21 +585,36 @@ class ClosedNetworkSimulator:
             admit(pid, now)
 
         return self._metrics(measured, now - t_measure_start, sum_resp,
-                             sum_energy, occupancy, power_int)
+                             sum_energy, occupancy, power_int,
+                             cls_meas, cls_resp, cls_energy)
 
     def _metrics(self, measured: int, elapsed: float, sum_resp: float,
                  sum_energy: float, occupancy: np.ndarray,
-                 power_int: float = 0.0) -> SimMetrics:
+                 power_int: float = 0.0, cls_meas=None, cls_resp=None,
+                 cls_energy=None) -> SimMetrics:
         x = measured / elapsed if elapsed > 0 else 0.0
         et = sum_resp / measured if measured else _INF
         ee = sum_energy / measured if measured else _INF
         occ = occupancy / max(elapsed, 1e-12)
+        C = self.n_classes
+        cm = np.asarray(cls_meas if cls_meas is not None else [measured],
+                        dtype=np.float64)
+        cr = np.asarray(cls_resp if cls_resp is not None else [sum_resp])
+        ce = np.asarray(cls_energy if cls_energy is not None else [sum_energy])
+        with np.errstate(divide="ignore", invalid="ignore"):
+            cls_x = cm / elapsed if elapsed > 0 else np.zeros(C)
+            cls_rt = np.where(cm > 0, cr / np.maximum(cm, 1.0), _INF)
+            cls_ee = np.where(cm > 0, ce / np.maximum(cm, 1.0), _INF)
+        cls_occ = np.zeros((C, occupancy.shape[1]))
+        np.add.at(cls_occ, self.cls, occ)
         return SimMetrics(throughput=x, mean_response_time=et, mean_energy=ee,
                           edp=ee * et, little_product=x * et,
                           completed=measured, elapsed=elapsed,
                           state_occupancy=occ,
                           mean_power=power_int / elapsed if elapsed > 0
-                          else 0.0)
+                          else 0.0,
+                          class_throughput=cls_x, class_response_time=cls_rt,
+                          class_energy=cls_ee, class_occupancy=cls_occ)
 
 
 def run_policy_sweep(cfg: SimConfig, policies,
@@ -487,8 +628,9 @@ def run_policy_sweep(cfg: SimConfig, policies,
         run (same seed => same task sizes), bit-reproducible across versions.
       * "jax"  — target policies run on the batched `lax.scan` device engine
         (its own JAX random stream: statistically equivalent, not
-        bit-identical to host runs); SystemView policies and piecewise
-        type-mix workloads fall back to the host core.
+        bit-identical to host runs), including piecewise type-mix workloads
+        (on-device re-draw, target pinned at the expected mix); SystemView
+        policies fall back to the host core.
       * "auto" — alias for "jax" with its fallbacks.
     """
     if engine not in ("host", "jax", "auto"):
@@ -496,7 +638,7 @@ def run_policy_sweep(cfg: SimConfig, policies,
     sim = ClosedNetworkSimulator(cfg)
     # the device engine needs a real measurement window; degenerate warmups
     # (legal on the host: zero measured completions) fall back too
-    jax_ok = (engine in ("jax", "auto") and cfg.type_mix is None
+    jax_ok = (engine in ("jax", "auto")
               and 0 <= cfg.warmup_completions < cfg.n_completions)
     out: dict[str, SimMetrics] = {}
     for c in (as_core(p, cfg.mu) for p in policies):

@@ -14,6 +14,8 @@ import numpy as np
 import pytest
 
 from repro.core.affinity import PowerModel
+from repro.sched import get_policy
+from repro.sched.priority import flat_mu, flatten_mixes, priority_sim_config
 from repro.sim import (ClosedNetworkSimulator, SimConfig, make_distribution,
                        sweep_jax)
 
@@ -72,3 +74,69 @@ def test_engine_conformance_x_and_energy(policy, order):
     assert max(e_rel) < PT_TOL, (policy, order, e_rel)
     assert np.mean(x_rel) < MEAN_TOL, (policy, order, x_rel)
     assert np.mean(e_rel) < MEAN_TOL, (policy, order, e_rel)
+
+
+# --------------------------------------------------------------------------
+# Multi-class cell: the same host-oracle gate for the priority subsystem —
+# per-class X AND per-class E must agree across engines on a
+# (mu x mix x seed) grid, for the class-weighted policy and the class-blind
+# baselines, under PS and the strict-priority PRIO order. Strict priority
+# can legitimately starve the batch class on a saturated column; the gate
+# then requires BOTH engines to agree the class starved (inf/inf).
+# --------------------------------------------------------------------------
+
+PMU_BASE = [np.random.default_rng(21).uniform(1, 30, size=(2, 3)),
+            np.random.default_rng(22).uniform(1, 30, size=(2, 3))]
+PCLASS_MIXES = np.array([[[3, 2], [7, 8]],       # (M, C, k): small latency
+                         [[2, 4], [9, 5]]])      # class + a big batch class
+PSEEDS = [0, 1]
+P_COMP, P_WARM = 3000, 600
+P_PT_TOL, P_MEAN_TOL = 0.2, 0.08
+
+
+@pytest.mark.parametrize("order", ["PS", "PRIO"])
+@pytest.mark.parametrize("policy", ["grin-p", "lb", "jsq"])
+def test_multiclass_engine_conformance_per_class(policy, order):
+    pol = (get_policy("grin-p", weights=[3.0, 1.0]) if policy == "grin-p"
+           else policy)
+    mixes_flat = flatten_mixes(PCLASS_MIXES)
+    mus_flat = np.stack([flat_mu(m, 2) for m in PMU_BASE])
+    cfg0 = priority_sim_config(
+        PMU_BASE[0], PCLASS_MIXES[0], distribution=make_distribution(
+            "exponential"), order=order, power=POWER, n_completions=P_COMP,
+        warmup_completions=P_WARM, seed=PSEEDS[0])
+    grid, dev = sweep_jax(cfg0, pol, mixes=mixes_flat, seeds=PSEEDS,
+                          mus=mus_flat)
+    x_rel, e_rel = [], []
+    i = 0
+    for g, mu in enumerate(PMU_BASE):
+        for cm in PCLASS_MIXES:
+            for s in PSEEDS:
+                cfg = priority_sim_config(
+                    mu, cm, distribution=make_distribution("exponential"),
+                    order=order, power=POWER, n_completions=P_COMP,
+                    warmup_completions=P_WARM, seed=s)
+                h = ClosedNetworkSimulator(cfg).run(pol)
+                # totals decompose into the class split on both engines
+                assert h.class_throughput.sum() == pytest.approx(
+                    h.throughput, rel=1e-9)
+                assert dev["class_throughput"][i].sum() == pytest.approx(
+                    dev["throughput"][i], rel=1e-5)
+                for c in range(2):
+                    hx = h.class_throughput[c]
+                    dx = dev["class_throughput"][i][c]
+                    he = h.class_energy[c]
+                    de = dev["class_energy"][i][c]
+                    if hx == 0 or dx == 0:     # strict-priority starvation:
+                        # engines must agree the class is dead, relative to
+                        # the point's own total rate (no absolute loophole)
+                        assert hx < 0.02 * h.throughput, (c, hx, dx)
+                        assert dx < 0.02 * dev["throughput"][i], (c, hx, dx)
+                        continue
+                    x_rel.append(abs(dx - hx) / hx)
+                    e_rel.append(abs(de - he) / he)
+                i += 1
+    assert max(x_rel) < P_PT_TOL, (policy, order, x_rel)
+    assert max(e_rel) < P_PT_TOL, (policy, order, e_rel)
+    assert np.mean(x_rel) < P_MEAN_TOL, (policy, order, x_rel)
+    assert np.mean(e_rel) < P_MEAN_TOL, (policy, order, e_rel)
