@@ -2,11 +2,13 @@
 
 Batched prefill + greedy decode with the ServeEngine; optionally schedules a
 mixed request stream across two pools with the paper's CAB policy
-(--heterogeneous).
+(--heterogeneous), or replays an open request trace through GrIn-P placement
+plus SLO admission control (--traffic).
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -15,7 +17,10 @@ import numpy as np
 
 from repro.configs import get_arch, smoke_config
 from repro.models.model import build_model
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import ServeEngine, request_service_fns
+
+_TRACE = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                      "examples", "data", "serve_trace.json")
 
 
 def main() -> None:
@@ -26,6 +31,15 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--heterogeneous", action="store_true",
                     help="CAB-schedule a prefill/decode mix over two pools")
+    ap.add_argument("--traffic", action="store_true",
+                    help="replay an open request trace through GrIn-P "
+                         "placement with SLO admission control")
+    ap.add_argument("--trace", default=None,
+                    help="request trace JSON (default: the bundled "
+                         "examples/data/serve_trace.json)")
+    ap.add_argument("--load", type=float, default=1.2,
+                    help="offered load as a fraction of measured capacity "
+                         "(--traffic; >1 = overload)")
     args = ap.parse_args()
 
     cfg = smoke_config(get_arch(args.arch))
@@ -60,24 +74,7 @@ def main() -> None:
         from repro.sched import SchedulerCore, get_policy
         from repro.sched.virtual import VirtualTimeCluster
 
-        def prefill_task(size):
-            logits, _ = engine.prefill(batch)
-            jax.block_until_ready(logits)
-
-        def decode_task(size):
-            _, cache = engine.prefill(
-                {k: (v[:, :4] if k == "tokens" and cfg.family != "audio"
-                     else v) for k, v in batch.items()})
-            o, _ = engine.decode_run(
-                toks[:, :1] if cfg.family != "audio" else toks[:, :, :1],
-                cache, 4, 4)
-            jax.block_until_ready(o)
-
-        def slow(fn, n):
-            return lambda size: [fn(size) for _ in range(n)]
-
-        fns = [{0: prefill_task, 1: slow(decode_task, 3)},
-               {0: slow(prefill_task, 3), 1: decode_task}]
+        fns = request_service_fns(engine, batch, toks)
         vc = VirtualTimeCluster(fns)
         mu = vc.measure_rates(2, reps=3)
         print(f"[serve] measured mu:\n{np.round(mu, 2)} "
@@ -88,6 +85,46 @@ def main() -> None:
             m = VirtualTimeCluster(fns).run_closed(
                 sched, types, n_completions=60, warmup=10)
             print(f"[serve] {sched.name}: X={m.throughput:.2f} req/s")
+
+    if args.traffic:
+        from repro.sched import SchedulerCore
+        from repro.sched.priority import GrInPriorityPolicy
+        from repro.sched.virtual import VirtualTimeCluster
+        from repro.traffic import (AdmissionController, SLOClass, load_trace,
+                                   replay_open)
+
+        fns = request_service_fns(engine, batch, toks)
+        vc = VirtualTimeCluster(fns)
+        mu = vc.measure_rates(2, reps=3)
+        print(f"[serve] measured mu:\n{np.round(mu, 2)}")
+        # saturation knee given the trace's class mix: the load where the
+        # busiest class fills its best pool; scale the trace so the offered
+        # rate is --load x that
+        times, classes = load_trace(args.trace or os.path.normpath(_TRACE))
+        trace_rate = len(times) / float(times[-1] - times[0])
+        shares = np.bincount(classes, minlength=2) / len(classes)
+        x_knee = 1.0 / max(shares[c] / mu[c].max() for c in range(2))
+        times = times * (trace_rate / (args.load * x_knee))
+        qcap = 6
+        core = SchedulerCore(GrInPriorityPolicy((2.0, 1.0)), mu)
+        # SLOs: protect the interactive prefill class at its own service
+        # plus 1.5x a worst-case head-of-line decode block (pools are FCFS);
+        # the decode class is best-effort
+        slo = (SLOClass(deadline=1.5 / mu[1].min() + 6.0 / mu[0].max(),
+                        percentile=0.9, protected=True),
+               SLOClass(deadline=60.0 / mu[1].max(), percentile=0.9))
+        adm = AdmissionController(core, slo, class_of_type=[0, 1],
+                                  queue_capacity=qcap, window=64,
+                                  adapt_every=8)
+        m = replay_open(vc, adm, times, classes, warmup=len(times) // 10)
+        print(f"[serve] GrIn-P + admission @ load {args.load:.2f}: "
+              f"goodput {m.throughput:.2f} req/s")
+        for c, name in enumerate(("prefill", "decode")):
+            print(f"[serve]   class {c} ({name}): done "
+                  f"{int(m.class_completed[c])} shed {int(m.class_shed[c])} "
+                  f"p50 {m.class_p50[c]:.3f}s p99 {m.class_p99[c]:.3f}s "
+                  f"SLO-met {m.class_deadline_met[c]:.2f} "
+                  f"limit {m.limits[c]:.0f}")
 
 
 if __name__ == "__main__":

@@ -895,6 +895,15 @@ class SchedulerCore:
         self._backlog = backlog.tolist()
         return js
 
+    def unroute(self, task_type: int, pool: int) -> None:
+        """Undo the most recent `route` of a task that was never admitted
+        (admission shed or a full finite queue): the exact inverse of the
+        count/backlog update, with no EWMA or rate-refresh side effects —
+        the task never ran, so there is nothing to observe."""
+        self._counts_rows[task_type][pool] -= 1
+        b = self._backlog[pool] - self._inv_mu_rows[task_type][pool]
+        self._backlog[pool] = b if b > 0.0 else 0.0
+
     def complete(self, task_type: int, pool: int,
                  service_s: float | None = None) -> None:
         """A task finished on `pool`; with a measured service time, fold the

@@ -66,3 +66,38 @@ class ServeEngine:
                 start += batch["patch_embeds"].shape[1]
         toks, cache = self.decode_run(feed, cache, start, steps - 1)
         return jnp.concatenate([first[:, None], toks], axis=1)
+
+
+def request_service_fns(engine: ServeEngine, batch: dict, toks,
+                        slowdown: int = 3):
+    """Two request classes on two heterogeneous pools, as real work.
+
+    Class 0 is a PREFILL request (one batched prefill — the interactive,
+    latency-sensitive class) and class 1 a DECODE request (short prefill +
+    a greedy decode run — the batch class). Pool 0 favors prefill, pool 1
+    decode; the off-diagonal runs `slowdown` repetitions, giving the 2 x 2
+    heterogeneous affinity the paper's CAB/GrIn placement exploits. Returns
+    `service_fns` for `repro.sched.virtual.VirtualTimeCluster` — the shared
+    service-function set behind `repro.launch.serve --heterogeneous` /
+    `--traffic` and `examples/serve_heterogeneous.py`.
+    """
+    cfg = engine.cfg
+
+    def prefill_task(size):
+        logits, _ = engine.prefill(batch)
+        jax.block_until_ready(logits)
+
+    def decode_task(size):
+        _, cache = engine.prefill(
+            {k: (v[:, :4] if k == "tokens" and cfg.family != "audio"
+                 else v) for k, v in batch.items()})
+        o, _ = engine.decode_run(
+            toks[:, :1] if cfg.family != "audio" else toks[:, :, :1],
+            cache, 4, 4)
+        jax.block_until_ready(o)
+
+    def slow(fn, n):
+        return lambda size: [fn(size) for _ in range(n)]
+
+    return [{0: prefill_task, 1: slow(decode_task, slowdown)},
+            {0: slow(prefill_task, slowdown), 1: decode_task}]

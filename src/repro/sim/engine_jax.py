@@ -69,6 +69,10 @@ def _dist_spec(distribution) -> tuple:
     if name == "bounded_pareto":
         return (name, float(distribution.alpha), float(distribution.low),
                 float(distribution.high), float(distribution._raw_mean))
+    if name == "hyperexp":
+        return (name, tuple(float(p) for p in distribution.probs),
+                tuple(float(r) for r in distribution.rates),
+                float(distribution._raw_mean))
     if name in ("exponential", "uniform", "constant"):
         return (name,)
     raise ValueError(f"no on-device sampler for distribution {name!r}")
@@ -83,6 +87,17 @@ def _size_sampler(spec: tuple):
         return lambda key: 2.0 * jax.random.uniform(key, dtype=jnp.float32)
     if name == "constant":
         return lambda key: jnp.float32(1.0)
+    if name == "hyperexp":
+        probs, rates, hraw = spec[1:]
+        logp = jnp.log(jnp.asarray(probs, jnp.float32))
+        inv_r = jnp.asarray([1.0 / r for r in rates], jnp.float32)
+
+        def sample_hyper(key):
+            kc, ke = jax.random.split(key)
+            comp = jax.random.categorical(kc, logp)
+            return (jax.random.exponential(ke, dtype=jnp.float32)
+                    * inv_r[comp] / hraw)
+        return sample_hyper
     a, L, H, raw_mean = spec[1:]
 
     def sample(key):
@@ -414,7 +429,11 @@ def _device_route_mode(pol) -> int:
 def simulate_policy_jax(cfg, core) -> "SimMetrics":
     """Device-engine replacement for `ClosedNetworkSimulator.run` for one
     target-policy (or on-device baseline) config. `type_mix` configs pin
-    the deficit target at the expected mix and re-draw types on device."""
+    the deficit target at the expected mix and re-draw types on device.
+    Open-network configs (`cfg.traffic`) dispatch to the open scan core."""
+    if getattr(cfg, "traffic", None) is not None:
+        from repro.traffic.engine import simulate_open_policy_jax
+        return simulate_open_policy_jax(cfg, core)
     mu = np.asarray(cfg.mu, dtype=np.float64)
     mix, t0 = _cfg_mix_and_types0(cfg)
     mode = _device_route_mode(core.policy)
@@ -464,6 +483,9 @@ def sweep_jax(cfg, policy, *, mixes=None, seeds=None, mus=None):
     `simulate_batch` dict over the B = G*M*S points.
     """
     from repro.sched.api import get_policy
+    if getattr(cfg, "traffic", None) is not None:
+        raise ValueError("open-traffic configs sweep via "
+                         "repro.traffic.engine.simulate_open_batch")
     pol = get_policy(policy)
     mode = _device_route_mode(pol)
     if cfg.type_mix is not None and mixes is not None:
@@ -527,6 +549,9 @@ def compare_policies_jax(cfg, policies, seeds=None) -> dict:
     `run_policy_sweep` ("Opt", "Opt#2", ...).
     """
     from repro.sched.api import as_core
+    if getattr(cfg, "traffic", None) is not None:
+        raise ValueError("open-traffic configs compare via "
+                         "repro.traffic.engine.simulate_open_batch")
     mu = np.asarray(cfg.mu, dtype=np.float64)
     mix, _ = _cfg_mix_and_types0(cfg)
     single = seeds is None

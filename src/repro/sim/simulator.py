@@ -81,6 +81,12 @@ class SimConfig:
     # Per-class task-size distributions (len C); None = `distribution` for
     # every class.
     class_distributions: tuple | None = None
+    # Open-network mode (repro.traffic): when set, arrivals inject tasks and
+    # completions depart instead of recirculating; n_programs_per_type
+    # becomes the reference mix target policies solve at, and finite
+    # per-processor queues (traffic.queue_capacity) bound the population.
+    # None = the closed network above, bit-identical to pre-traffic runs.
+    traffic: "object | None" = None
 
 
 @dataclasses.dataclass
@@ -107,6 +113,17 @@ class SimMetrics:
     class_response_time: np.ndarray | None = None
     class_energy: np.ndarray | None = None
     class_occupancy: np.ndarray | None = None
+    # Open-network (SimConfig.traffic) extras; None on closed runs.
+    # offered counts post-warmup arrivals; dropped = shed by admission +
+    # rejected by a full finite queue (so goodput = throughput vs the
+    # offered rate offered / elapsed). class_quantiles is (C, 3) response
+    # p50/p99/p999 (repro.traffic.quantiles.QUANTILES); class_deadline_met
+    # is the in-window fraction meeting each class's SLO deadline.
+    offered: int | None = None
+    dropped: int | None = None
+    class_dropped: np.ndarray | None = None
+    class_quantiles: np.ndarray | None = None
+    class_deadline_met: np.ndarray | None = None
 
 
 class ClosedNetworkSimulator:
@@ -131,11 +148,22 @@ class ClosedNetworkSimulator:
                 and len(cfg.class_distributions) != self.n_classes):
             raise ValueError(f"need {self.n_classes} class_distributions; "
                              f"got {len(cfg.class_distributions)}")
+        if cfg.traffic is not None:
+            if cfg.traffic.spec.n_classes != self.n_classes:
+                raise ValueError(
+                    f"traffic spec has {cfg.traffic.spec.n_classes} classes; "
+                    f"class_of_type implies {self.n_classes}")
+            if cfg.type_mix is not None:
+                raise ValueError("type_mix is a closed-network knob; open "
+                                 "mode draws types from traffic.spec")
 
     def run(self, policy: str | Policy | SchedulerCore) -> SimMetrics:
         """Simulate under a policy: a registry name ("cab", "grin", "lb",
         ...), a Policy instance, or a prebuilt SchedulerCore (reset here)."""
         core = as_core(policy, self.mu)
+        if self.cfg.traffic is not None:
+            from repro.traffic.host import run_open
+            return run_open(self, core)
         if core.policy.needs_target:
             return self._run_fast(core)
         return self._run_compat(core)

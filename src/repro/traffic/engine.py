@@ -1,0 +1,433 @@
+"""Batched on-device OPEN-network simulation (`lax.scan` event core).
+
+The open analogue of `repro.sim.engine_jax`: arrivals inject tasks,
+completions depart instead of recirculating, finite per-processor queues
+(queue_capacity) bound the population, and per-class response times
+accumulate into the fixed-bin log-histogram (`repro.traffic.quantiles`)
+so p50/p99/p999 come off-device with a documented error bound.
+
+Event semantics match the host oracle (`repro.traffic.host`) event for
+event over the IDENTICAL pre-sampled arrival realization (times and types
+are inputs, sampled on the host from the spec's [seed, 0] substream):
+
+  * each scan step consumes the earliest pending event — the next arrival
+    or the earliest completion (arrival first on exact ties); 2 * T steps
+    cover every arrival plus every possible completion, trailing steps
+    no-op on an empty system;
+  * an arriving class-c task is SHED when the total population has reached
+    admit_limits[c], and DROPPED when the processor it routes to already
+    holds queue_capacity tasks (the route has no side effects on device,
+    so the host's `unroute` has no analogue here);
+  * the measurement window counts arrivals (and drops) by INDEX from
+    warmup_arrivals on, and completions / time integrals over the interval
+    (t_warm, t_end] bounded by the warmup-th and last arrival times.
+
+The population bound l * queue_capacity makes the slot arrays fixed-size:
+proc == -1 marks a free slot, admissions fill the lowest free slot, and
+the PS/FCFS/PRIO depletion rules are the closed core's with an `active`
+guard. Task sizes use JAX's counter-based RNG (statistically — not bit- —
+identical to host draws); routing supports the same five per-point modes.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.affinity import PowerModel, PROPORTIONAL_POWER
+from repro.sched.api import _mu_tiebreak_ranks, deficit_route_jax
+from repro.sim.engine_jax import (MODE_BF, MODE_DEFICIT, MODE_JSQ, MODE_LB,
+                                  MODE_RD, _device_route_mode, _dist_spec,
+                                  _size_sampler)
+from repro.traffic.quantiles import QUANTILES, LogHistogram
+
+_BIG_STAMP = np.int32(2**31 - 1)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "order", "dist_specs", "n_arrivals", "n_slots", "warmup", "cls_of",
+    "qcap", "hist_lo", "hist_hi", "hist_bins"))
+def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
+                         admit, deadlines, *, order, dist_specs, n_arrivals,
+                         n_slots, warmup, cls_of, qcap, hist_lo, hist_hi,
+                         hist_bins):
+    """vmapped open scan core. Batched args: mu/P/target/rank (B, k, l),
+    arr_t/arr_ty (B, T), keys (B, 2), modes (B,), admit (B, C) in-system
+    caps, deadlines (B, C). Statics: the service order, per-class size
+    specs, T, the slot count l * qcap, the arrival-index warmup, the
+    type -> class map, the queue capacity and the histogram geometry."""
+    samplers = [_size_sampler(s) for s in dist_specs]
+    n_cls = max(cls_of) + 1
+    T = n_arrivals
+    ns = n_slots
+    log_g = float(np.log(hist_hi / hist_lo) / hist_bins)
+
+    def one(mu, P, target, rank, arr_t, arr_ty, key, mode, admit, deadlines):
+        k, l = mu.shape
+        order_ps = order == "PS"
+        order_prio = order == "PRIO"
+        cls_arr = jnp.asarray(cls_of, jnp.int32)
+        idx_s = jnp.arange(ns, dtype=jnp.int32)
+        cols = jnp.arange(l)
+        stamp_cap = jnp.int32(2 * T + 2)       # PRIO key stride > any stamp
+        t_warm = arr_t[warmup - 1] if warmup > 0 else jnp.float32(0.0)
+        t_end = arr_t[T - 1]
+
+        def sample_for(skey, t):
+            if len(samplers) == 1:
+                return samplers[0](skey)
+            return jnp.stack([s(skey) for s in samplers])[cls_arr[t]]
+
+        def route_one(counts, backlog, t, rkey):
+            j_def = deficit_route_jax(target, rank, counts, t)
+            j_jsq = jnp.argmin(counts.sum(0))
+            j_lb = jnp.argmin(backlog)
+            j_bf = jnp.argmax(mu[t])
+            j_rd = jax.random.randint(rkey, (), 0, l)
+            return jnp.where(mode == MODE_JSQ, j_jsq,
+                             jnp.where(mode == MODE_LB, j_lb,
+                                       jnp.where(mode == MODE_RD, j_rd,
+                                                 jnp.where(mode == MODE_BF,
+                                                           j_bf, j_def))))
+
+        state = (key, jnp.float32(0.0), jnp.int32(0),
+                 jnp.full(ns, -1, jnp.int32),          # proc (-1 = free)
+                 jnp.zeros(ns, jnp.int32),             # types
+                 jnp.full(ns, jnp.inf, jnp.float32),   # remaining
+                 jnp.zeros(ns, jnp.float32),           # need
+                 jnp.zeros(ns, jnp.float32),           # size_left
+                 jnp.zeros(ns, jnp.float32),           # entry
+                 jnp.full(ns, _BIG_STAMP, jnp.int32),  # stamp
+                 jnp.full(l, -1, jnp.int32),           # run_pid (PRIO heads)
+                 jnp.zeros((k, l), jnp.int32),         # counts
+                 jnp.zeros((n_cls, hist_bins), jnp.float32),   # hist
+                 jnp.zeros(n_cls, jnp.float32),        # resp_c
+                 jnp.zeros(n_cls, jnp.float32),        # meas_c
+                 jnp.zeros(n_cls, jnp.float32),        # energy_c
+                 jnp.zeros(n_cls, jnp.float32),        # dm_c (deadline met)
+                 jnp.zeros(n_cls, jnp.float32),        # drop_c
+                 jnp.zeros((k, l), jnp.float32),       # occ
+                 jnp.float32(0.0))                     # power integral
+
+        def step(state, i):
+            (key, now, a_ptr, proc, types, remaining, need, size_left,
+             entry, stamp, run_pid, counts, hist, resp_c, meas_c, energy_c,
+             dm_c, drop_c, occ, power) = state
+            active = proc >= 0
+            proc_safe = jnp.maximum(proc, 0)
+            mask = proc[:, None] == cols[None, :]               # (ns, l)
+            cnt = mask.sum(0)
+            cntf = cnt.astype(jnp.float32)
+            cnt_safe = jnp.maximum(cntf, 1.0)
+            if order_ps:
+                rem_col = jnp.where(mask, remaining[:, None], jnp.inf)
+                dtj = jnp.where(cnt > 0, rem_col.min(0) * cntf, jnp.inf)
+                pw = jnp.where(active,
+                               P[types, proc_safe] / cnt_safe[proc_safe],
+                               0.0).sum()
+            elif order_prio:
+                rp = jnp.maximum(run_pid, 0)
+                dtj = jnp.where(cnt > 0, remaining[rp], jnp.inf)
+                pw = jnp.where(cnt > 0, P[types[rp], cols], 0.0).sum()
+            else:
+                stamp_col = jnp.where(mask, stamp[:, None], _BIG_STAMP)
+                head = jnp.argmin(stamp_col, axis=0)            # (l,)
+                dtj = jnp.where(cnt > 0, remaining[head], jnp.inf)
+                pw = jnp.where(cnt > 0, P[types[head], cols], 0.0).sum()
+            j_star = jnp.argmin(dtj)
+            dt_c = dtj[j_star]
+            ta = jnp.where(a_ptr < T, arr_t[jnp.clip(a_ptr, 0, T - 1)],
+                           jnp.inf)
+            do_arr = (a_ptr < T) & (ta - now <= dt_c)   # arrival first on tie
+            do_comp = (~do_arr) & jnp.isfinite(dt_c)
+            dt = jnp.where(do_arr, ta - now,
+                           jnp.where(do_comp, dt_c, 0.0))
+            new_now = now + dt
+            # time integrals over the overlap with the window [t_warm, t_end]
+            ow = jnp.clip(jnp.minimum(new_now, t_end) - jnp.maximum(now, t_warm),
+                          0.0, None)
+            occ = occ + ow * counts.astype(jnp.float32)
+            power = power + ow * pw
+            now = new_now
+            # ---- deplete in-service tasks over dt ----
+            if order_ps:
+                dep = jnp.where(active, dt / cnt_safe[proc_safe], 0.0)
+            elif order_prio:
+                is_run = active & (run_pid[proc_safe] == idx_s)
+                dep = jnp.where(is_run, dt, 0.0)
+            else:
+                is_head = active & (idx_s == head[proc_safe])
+                dep = jnp.where(is_head, dt, 0.0)
+            remaining = remaining - dep
+            frac = jnp.where(need > 0, dep / need, 0.0)
+            size_left = jnp.maximum(size_left - frac * size_left, 0.0)
+
+            # ---- completion branch (identity when do_arr / no-op) ----
+            if order_ps:
+                pid = jnp.argmin(jnp.where(proc == j_star, remaining,
+                                           jnp.inf))
+            elif order_prio:
+                pid = jnp.maximum(run_pid[j_star], 0)
+            else:
+                pid = head[j_star]
+            t_done = types[pid]
+            c_done = cls_arr[t_done]
+            wf = jnp.where(do_comp & (now > t_warm) & (now <= t_end),
+                           1.0, 0.0)
+            resp = now - entry[pid]
+            b = jnp.clip(jnp.floor(
+                jnp.log(jnp.maximum(resp, 1e-30) / hist_lo) / log_g),
+                0, hist_bins - 1).astype(jnp.int32)
+            hist = hist.at[c_done, b].add(wf)
+            resp_c = resp_c.at[c_done].add(wf * resp)
+            meas_c = meas_c.at[c_done].add(wf)
+            energy_c = energy_c.at[c_done].add(wf * P[t_done, j_star]
+                                               * need[pid])
+            dm_c = dm_c.at[c_done].add(
+                wf * jnp.where(resp <= deadlines[c_done], 1.0, 0.0))
+            comp_i = jnp.where(do_comp, 1, 0).astype(jnp.int32)
+            counts = counts.at[t_done, j_star].add(-comp_i)
+            if order_prio:
+                # next head BEFORE freeing the slot: oldest waiting task of
+                # the best class present on j_star, excluding the finisher
+                waiting = (proc == j_star) & (idx_s != pid)
+                pkey = cls_arr[types] * stamp_cap + stamp
+                nxt = jnp.argmin(jnp.where(waiting, pkey, _BIG_STAMP))
+                new_head = jnp.where(waiting.any(), nxt.astype(jnp.int32),
+                                     -1)
+                run_pid = run_pid.at[j_star].set(
+                    jnp.where(do_comp, new_head, run_pid[j_star]))
+            proc = proc.at[pid].set(jnp.where(do_comp, -1, proc[pid]))
+            remaining = remaining.at[pid].set(
+                jnp.where(do_comp, jnp.inf, remaining[pid]))
+            need = need.at[pid].set(jnp.where(do_comp, 0.0, need[pid]))
+            size_left = size_left.at[pid].set(
+                jnp.where(do_comp, 0.0, size_left[pid]))
+            stamp = stamp.at[pid].set(
+                jnp.where(do_comp, _BIG_STAMP, stamp[pid]))
+
+            # ---- arrival branch (identity when do_comp / no-op; the two
+            # branches are exclusive, so post-completion state == pre-state
+            # whenever this one applies) ----
+            a_idx = jnp.clip(a_ptr, 0, T - 1)
+            t_new = arr_ty[a_idx]
+            c_new = cls_arr[t_new]
+            key, sub = jax.random.split(key)
+            mask2 = proc[:, None] == cols[None, :]
+            backlog = jnp.where(mask2, size_left[:, None], 0.0).sum(0)
+            j_new = route_one(counts, backlog, t_new,
+                              jax.random.fold_in(sub, 1))
+            ok_limit = counts.sum() < admit[c_new]
+            ok_queue = counts.sum(0)[j_new] < qcap
+            admit_ok = do_arr & ok_limit & ok_queue
+            dropped = do_arr & ~(ok_limit & ok_queue) & (a_ptr >= warmup)
+            drop_c = drop_c.at[c_new].add(jnp.where(dropped, 1.0, 0.0))
+            slot = jnp.argmin(proc)            # lowest free (-1) slot
+            s_new = sample_for(sub, t_new)
+            sn = s_new / mu[t_new, j_new]
+            adm_i = jnp.where(admit_ok, 1, 0).astype(jnp.int32)
+            counts = counts.at[t_new, j_new].add(adm_i)
+            proc = proc.at[slot].set(jnp.where(admit_ok, j_new, proc[slot]))
+            types = types.at[slot].set(
+                jnp.where(admit_ok, t_new, types[slot]))
+            remaining = remaining.at[slot].set(
+                jnp.where(admit_ok, sn, remaining[slot]))
+            need = need.at[slot].set(jnp.where(admit_ok, sn, need[slot]))
+            size_left = size_left.at[slot].set(
+                jnp.where(admit_ok, s_new, size_left[slot]))
+            entry = entry.at[slot].set(jnp.where(admit_ok, now, entry[slot]))
+            stamp = stamp.at[slot].set(jnp.where(admit_ok, i, stamp[slot]))
+            if order_prio:
+                run_pid = run_pid.at[j_new].set(
+                    jnp.where(admit_ok & (run_pid[j_new] < 0), slot,
+                              run_pid[j_new]))
+            a_ptr = a_ptr + jnp.where(do_arr, 1, 0).astype(jnp.int32)
+            return (key, now, a_ptr, proc, types, remaining, need,
+                    size_left, entry, stamp, run_pid, counts, hist, resp_c,
+                    meas_c, energy_c, dm_c, drop_c, occ, power), None
+
+        state, _ = jax.lax.scan(step, state,
+                                jnp.arange(2 * T, dtype=jnp.int32))
+        (_, _, _, _, _, _, _, _, _, _, _, _, hist, resp_c, meas_c,
+         energy_c, dm_c, drop_c, occ, power) = state
+        elapsed = t_end - t_warm
+        return (hist, resp_c, meas_c, energy_c, dm_c, drop_c, occ, power,
+                elapsed)
+
+    return jax.vmap(one)(mu, P, target, rank, arr_t, arr_ty, keys, modes,
+                         admit, deadlines)
+
+
+def simulate_open_batch(mu, targets, arr_times, arr_types, seeds, *,
+                        distribution, queue_capacity, order="PS",
+                        warmup_arrivals=0,
+                        power: PowerModel = PROPORTIONAL_POWER, modes=None,
+                        class_of_type=None, class_distributions=None,
+                        admit_limits=None, hist: LogHistogram | None = None,
+                        deadlines=None):
+    """Simulate B open networks in one device call.
+
+    mu: (k, l) shared or (B, k, l); targets: (B, k, l) reference placements
+    (deficit points; baseline points ignore their rows); arr_times (B, T)
+    sorted absolute arrival times with arr_types (B, T) type rows (both
+    pre-sampled on the host, e.g. `TrafficSpec.sample`); seeds (B,) feed
+    the size streams; modes as in `simulate_batch`. `admit_limits` ((C,) or
+    (B, C)) are the in-system shed caps (default: no shedding), `deadlines`
+    ((C,) or (B, C)) the SLO deadline per class (default +inf).
+
+    Returns the closed-engine result dict plus the open extras: offered /
+    dropped (B,), class_dropped (B, C), class_hist (B, C, n_bins),
+    class_quantiles (B, C, 3) — p50/p99/p999 recovered from the histogram
+    with `hist.rel_error_bound` accuracy — and class_deadline_met (B, C).
+    """
+    targets = np.asarray(targets)
+    B, k, l = targets.shape
+    mu = np.asarray(mu, dtype=np.float64)
+    mus = np.broadcast_to(mu, (B, k, l)) if mu.ndim == 2 else mu
+    if mus.shape != (B, k, l):
+        raise ValueError(f"mu must be (k, l) or (B, k, l); got {mu.shape}")
+    arr_times = np.asarray(arr_times, dtype=np.float64)
+    arr_types = np.asarray(arr_types, dtype=np.int64)
+    if arr_times.ndim != 2 or arr_times.shape[0] != B:
+        raise ValueError(f"arr_times must be (B, T); got {arr_times.shape}")
+    if arr_types.shape != arr_times.shape:
+        raise ValueError("arr_types must match arr_times")
+    T = arr_times.shape[1]
+    if not 0 <= warmup_arrivals < T:
+        raise ValueError("need 0 <= warmup_arrivals < T")
+    if order not in ("PS", "FCFS", "PRIO"):
+        raise ValueError(f"unknown order {order!r}: PS | FCFS | PRIO")
+    if queue_capacity < 1:
+        raise ValueError("queue_capacity must be >= 1")
+    modes = (np.zeros(B, dtype=np.int32) if modes is None
+             else np.asarray(modes, dtype=np.int32))
+    if modes.shape != (B,) or modes.min() < 0 or modes.max() > MODE_BF:
+        raise ValueError(f"modes must be (B,) ints in [0, {MODE_BF}]")
+    cls = (np.zeros(k, dtype=np.int64) if class_of_type is None
+           else np.asarray(class_of_type, dtype=np.int64))
+    C = int(cls.max()) + 1
+    if class_distributions is not None:
+        dist_specs = tuple(_dist_spec(d) for d in class_distributions)
+        if len(dist_specs) != C:
+            raise ValueError(f"need {C} class_distributions")
+    else:
+        dist_specs = (_dist_spec(distribution),)
+    ns = int(l * queue_capacity)
+    admit = (np.full((B, C), ns, dtype=np.int64) if admit_limits is None
+             else np.broadcast_to(
+                 np.asarray(admit_limits, dtype=np.int64), (B, C)))
+    admit = np.clip(admit, 0, ns)
+    dl = (np.full((B, C), np.inf) if deadlines is None
+          else np.broadcast_to(np.asarray(deadlines, dtype=np.float64),
+                               (B, C)))
+    hist = hist if hist is not None else LogHistogram()
+    if mu.ndim == 2:
+        P = np.broadcast_to(power.power_matrix(mu), (B, k, l))
+        ranks = np.broadcast_to(_mu_tiebreak_ranks(mu), (B, k, l))
+    else:
+        P = np.stack([power.power_matrix(m) for m in mus])
+        ranks = np.stack([_mu_tiebreak_ranks(m) for m in mus])
+    keys = np.stack([np.asarray(jax.random.PRNGKey(int(s))) for s in seeds])
+    (h, resp_c, meas_c, energy_c, dm_c, drop_c, occ, power_int,
+     elapsed) = _simulate_open_fleet(
+        jnp.asarray(mus, jnp.float32), jnp.asarray(P, jnp.float32),
+        jnp.asarray(targets, jnp.int32), jnp.asarray(ranks),
+        jnp.asarray(arr_times, jnp.float32),
+        jnp.asarray(arr_types, jnp.int32), jnp.asarray(keys),
+        jnp.asarray(modes), jnp.asarray(admit, jnp.int32),
+        jnp.asarray(dl, jnp.float32), order=order, dist_specs=dist_specs,
+        n_arrivals=T, n_slots=ns, warmup=int(warmup_arrivals),
+        cls_of=tuple(int(c) for c in cls), qcap=int(queue_capacity),
+        hist_lo=float(hist.lo), hist_hi=float(hist.hi),
+        hist_bins=int(hist.n_bins))
+    h = np.asarray(h, np.float64)
+    meas_c, resp_c, energy_c, dm_c, drop_c = (
+        np.asarray(v, np.float64)
+        for v in (meas_c, resp_c, energy_c, dm_c, drop_c))
+    occ = np.asarray(occ, np.float64)
+    power_int = np.asarray(power_int, np.float64)
+    elapsed = np.asarray(elapsed, np.float64)
+    measured = meas_c.sum(axis=1)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        x = np.where(elapsed > 0, measured / elapsed, 0.0)
+        et = np.where(measured > 0, resp_c.sum(1) / np.maximum(measured, 1.0),
+                      np.inf)
+        ee = np.where(measured > 0,
+                      energy_c.sum(1) / np.maximum(measured, 1.0), np.inf)
+        cls_x = meas_c / elapsed[:, None]
+        cls_rt = np.where(meas_c > 0, resp_c / np.maximum(meas_c, 1.0),
+                          np.inf)
+        cls_ee = np.where(meas_c > 0, energy_c / np.maximum(meas_c, 1.0),
+                          np.inf)
+        cls_dm = np.where(meas_c > 0, dm_c / np.maximum(meas_c, 1.0), 0.0)
+    occ = occ / np.maximum(elapsed, 1e-12)[:, None, None]
+    cls_occ = np.zeros((B, C, l))
+    np.add.at(cls_occ, (slice(None), cls), occ)
+    quants = np.stack([hist.quantiles(h[b], QUANTILES) for b in range(B)])
+    return {"throughput": x, "mean_response_time": et, "mean_energy": ee,
+            "edp": ee * et, "little_product": x * et,
+            "completed": measured.astype(np.int64), "elapsed": elapsed,
+            "state_occupancy": occ,
+            "mean_power": power_int / np.maximum(elapsed, 1e-12),
+            "class_throughput": cls_x, "class_response_time": cls_rt,
+            "class_energy": cls_ee, "class_occupancy": cls_occ,
+            "offered": np.full(B, T - warmup_arrivals, dtype=np.int64),
+            "dropped": drop_c.sum(1).astype(np.int64),
+            "class_dropped": drop_c.astype(np.int64),
+            "class_hist": h, "class_quantiles": quants,
+            "class_deadline_met": cls_dm}
+
+
+def simulate_open_policy_jax(cfg, core):
+    """Device-engine replacement for the host open loop for one policy
+    config: the open analogue of `simulate_policy_jax` (same SimMetrics,
+    quantiles from the device histogram)."""
+    tr = cfg.traffic
+    mu = np.asarray(cfg.mu, dtype=np.float64)
+    mix = np.asarray(cfg.n_programs_per_type, dtype=np.int64)
+    mode = _device_route_mode(core.policy)
+    target = (np.asarray(core.policy.solve_target(mu, mix))
+              if mode == MODE_DEFICIT else np.zeros(mu.shape, np.int64))
+    times, tys = tr.spec.sample(cfg.seed, tr.n_arrivals)
+    out = simulate_open_batch(
+        mu, target[None], times[None], tys[None], [cfg.seed],
+        distribution=cfg.distribution, queue_capacity=tr.queue_capacity,
+        order=cfg.order, warmup_arrivals=tr.warmup_arrivals,
+        power=cfg.power, modes=[mode], class_of_type=cfg.class_of_type,
+        class_distributions=cfg.class_distributions,
+        admit_limits=tr.resolved_admit_limits(mu.shape[1])[None],
+        hist=tr.hist,
+        deadlines=(tr.resolved_deadlines()[None]
+                   if tr.deadlines is not None else None))
+    return open_metrics_row(out, 0, track_deadlines=tr.deadlines is not None)
+
+
+def open_metrics_row(out: dict, i: int, track_deadlines: bool = True):
+    """One batch row as an open-mode SimMetrics."""
+    from repro.sim.simulator import SimMetrics
+    return SimMetrics(
+        throughput=float(out["throughput"][i]),
+        mean_response_time=float(out["mean_response_time"][i]),
+        mean_energy=float(out["mean_energy"][i]),
+        edp=float(out["edp"][i]),
+        little_product=float(out["little_product"][i]),
+        completed=int(out["completed"][i]),
+        elapsed=float(out["elapsed"][i]),
+        state_occupancy=out["state_occupancy"][i],
+        mean_power=float(out["mean_power"][i]),
+        class_throughput=out["class_throughput"][i],
+        class_response_time=out["class_response_time"][i],
+        class_energy=out["class_energy"][i],
+        class_occupancy=out["class_occupancy"][i],
+        offered=int(out["offered"][i]), dropped=int(out["dropped"][i]),
+        class_dropped=out["class_dropped"][i],
+        class_quantiles=out["class_quantiles"][i],
+        class_deadline_met=(out["class_deadline_met"][i]
+                            if track_deadlines else None))
+
+
+__all__ = ["simulate_open_batch", "simulate_open_policy_jax",
+           "open_metrics_row"]

@@ -140,3 +140,107 @@ def test_multiclass_engine_conformance_per_class(policy, order):
     assert max(e_rel) < P_PT_TOL, (policy, order, e_rel)
     assert np.mean(x_rel) < P_MEAN_TOL, (policy, order, x_rel)
     assert np.mean(e_rel) < P_MEAN_TOL, (policy, order, e_rel)
+
+
+# --------------------------------------------------------------------------
+# Open-arrival cell: the same host-oracle gate for the traffic subsystem.
+# Both engines consume the SAME pre-sampled arrival realization (times and
+# types from `TrafficSpec.sample`), so arrival noise cancels exactly and
+# only the size streams differ: per-class throughput, response time, p99
+# (device: log-histogram; host: exact) and drop fractions must agree
+# statistically on a (mu x spec x seed) grid under PS and PRIO.
+# --------------------------------------------------------------------------
+
+from repro.sched import SchedulerCore  # noqa: E402
+from repro.sched.priority import GrInPriorityPolicy  # noqa: E402
+from repro.sim.engine_jax import (MODE_DEFICIT,  # noqa: E402
+                                  _BASELINE_MODES)
+from repro.traffic import (MMPPArrivals, PoissonArrivals,  # noqa: E402
+                           TrafficSpec, open_sim_config, simulate_open_batch)
+from repro.traffic.config import derive_target_mix  # noqa: E402
+
+OMUS = [np.random.default_rng(41).uniform(2, 20, size=(2, 2)),
+        np.random.default_rng(42).uniform(2, 20, size=(2, 2))]
+OSEEDS = [0, 1]
+O_T, O_WARM, O_QCAP = 4000, 800, 6
+O_CLS = [0, 1]
+# per-point tolerances at ~3200 measured arrivals; grid means much tighter
+O_X_TOL, O_ET_TOL, O_P99_TOL = 0.15, 0.30, 0.45
+O_X_MEAN, O_ET_MEAN = 0.05, 0.12
+O_DROP_ABS, O_DROP_MEAN = 0.06, 0.03
+
+
+def _open_specs(mu):
+    """Two traffic shapes per system at ~0.7 of each class's best rate:
+    smooth Poisson, and an MMPP burst stream on the latency class."""
+    lam = [0.7 * mu[c].max() for c in range(2)]
+    return [
+        TrafficSpec((PoissonArrivals(lam[0]), PoissonArrivals(lam[1])),
+                    np.eye(2)),
+        TrafficSpec((MMPPArrivals(rates=(2.0 * lam[0], 0.25 * lam[0]),
+                                  mean_dwell=(2.0, 4.0)),
+                     PoissonArrivals(lam[1])), np.eye(2)),
+    ]
+
+
+def _open_grid():
+    return [(mi, si, s) for mi in range(len(OMUS)) for si in range(2)
+            for s in OSEEDS]
+
+
+@pytest.mark.parametrize("order", ["PS", "PRIO"])
+@pytest.mark.parametrize("policy", ["grin-p", "lb", "jsq"])
+def test_open_engine_conformance_per_class(policy, order):
+    pol = (GrInPriorityPolicy((2.0, 1.0)) if policy == "grin-p" else
+           get_policy(policy))
+    dist = make_distribution("exponential")
+    rows_mu, rows_tgt, rows_t, rows_ty, rows_seed, hosts = [], [], [], [], [], []
+    for mi, si, s in _open_grid():
+        mu = OMUS[mi]
+        spec = _open_specs(mu)[si]
+        mix = derive_target_mix(spec, mu.shape[1], O_QCAP)
+        cfg = open_sim_config(mu, spec, n_arrivals=O_T,
+                              warmup_arrivals=O_WARM, queue_capacity=O_QCAP,
+                              class_of_type=O_CLS, target_mix=mix,
+                              distribution=dist, order=order, seed=s)
+        hosts.append(ClosedNetworkSimulator(cfg).run(pol))
+        times, tys = spec.sample(s, O_T)
+        rows_mu.append(mu)
+        rows_tgt.append(np.asarray(pol.solve_target(mu, mix))
+                        if pol.needs_target
+                        else np.zeros(mu.shape, np.int64))
+        rows_t.append(times)
+        rows_ty.append(tys)
+        rows_seed.append(s)
+    mode = MODE_DEFICIT if pol.needs_target else _BASELINE_MODES[pol.key]
+    dev = simulate_open_batch(
+        np.stack(rows_mu), np.stack(rows_tgt), np.stack(rows_t),
+        np.stack(rows_ty), rows_seed, distribution=dist,
+        queue_capacity=O_QCAP, order=order, warmup_arrivals=O_WARM,
+        class_of_type=O_CLS, power=POWER,
+        modes=np.full(len(hosts), mode, np.int32))
+    x_rel, et_rel, p99_rel, drop_abs = [], [], [], []
+    for i, h in enumerate(hosts):
+        for c in range(2):
+            hx, dx = h.class_throughput[c], float(
+                dev["class_throughput"][i][c])
+            assert hx > 0 and dx > 0, (i, c, hx, dx)
+            x_rel.append(abs(dx - hx) / hx)
+            het = h.class_response_time[c]
+            det = float(dev["class_response_time"][i][c])
+            et_rel.append(abs(det - het) / het)
+            # tails: exact host quantile vs device histogram quantile
+            hp99 = float(np.asarray(h.class_quantiles)[c, 1])
+            dp99 = float(dev["class_quantiles"][i][c, 1])
+            p99_rel.append(abs(dp99 - hp99) / hp99)
+            assert p99_rel[-1] < O_P99_TOL, (i, c, hp99, dp99)
+        # drops: same arrival realization, so fractions must track closely
+        off = h.offered
+        drop_abs.append(abs(h.dropped / off - float(dev["dropped"][i]) / off))
+        assert drop_abs[-1] < O_DROP_ABS, (i, h.dropped, dev["dropped"][i])
+    assert max(x_rel) < O_X_TOL, (policy, order, x_rel)
+    assert np.mean(x_rel) < O_X_MEAN, (policy, order, x_rel)
+    assert max(et_rel) < O_ET_TOL, (policy, order, et_rel)
+    assert np.mean(et_rel) < O_ET_MEAN, (policy, order, et_rel)
+    assert np.mean(drop_abs) < O_DROP_MEAN, (policy, order, drop_abs)
+    assert np.mean(p99_rel) < 0.15, (policy, order, p99_rel)
