@@ -1,0 +1,28 @@
+"""Fault injection and resilience (`repro.faults`).
+
+A `FaultScenario` describes processor crash/recovery events, degraded-mu
+stragglers, correlated multi-pool storms, transient task failures with
+re-execution, a checkpoint-restart cost model, hedged duplicate dispatch
+for protected classes, and automatic target refresh on topology events.
+The scenario is REALIZED on the host into plain arrays (piecewise-constant
+per-pool mu scales + per-arrival failure counts) that BOTH engines consume:
+the host event loops (`run_closed_faults` / `run_open_faults`) and the
+device `lax.scan` fault cores (`repro.sim.engine_jax.simulate_batch` /
+`repro.traffic.engine.simulate_open_batch` with a `FaultBatch`), so a
+(scenario x policy x seed) grid sweeps in one device call against an
+identical fault realization.
+
+RNG stream isolation: fault realization draws come only from the dedicated
+substreams `default_rng([seed, 2])` (transient failures, host) and
+`default_rng([seed, 3])` (storm generation); on device the per-step failure
+draw uses `fold_in(sub, 3)` (routing owns 1, mix re-draw owns 2). Enabling
+faults with zero in-horizon events therefore leaves every existing engine
+golden bit-identical — see tests/test_faults.py.
+"""
+from repro.faults.scenario import (FaultRealization, FaultScenario, PoolEvent,
+                                   crash, degrade, make_storm)
+from repro.faults.targets import segment_targets
+from repro.faults.device import FaultBatch, build_fault_batch
+from repro.faults.host import run_closed_faults, run_open_faults
+
+__all__ = [s for s in dir() if not s.startswith("_")]

@@ -1,0 +1,60 @@
+"""Per-fault-segment routing targets on the what-if solver fabric.
+
+``refresh_targets=False`` keeps the fault-free target pinned through every
+topology event (the "static" baseline in BENCH_pr7). ``refresh_targets=True``
+re-solves N* for each availability segment under the segment-scaled mu —
+exactly the re-solve `elastic_what_if` prices, run as ONE batched
+`solve_targets_grid_jax` call over all segments when the policy supports
+the device solver, so even long storm schedules cost a single compiled
+while-loop.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.faults.scenario import FaultRealization
+from repro.sched.api import Policy, solve_targets_grid_jax
+
+# Crashed pools enter the solver with this relative mu floor instead of an
+# exact zero (keeps the closed forms finite); routing never selects them
+# anyway because the availability mask wins.
+_CRASH_MU_REL = 1e-9
+
+
+def segment_targets(policy: Policy, mu: np.ndarray, mix: np.ndarray,
+                    real: FaultRealization, *, refresh: bool) -> np.ndarray:
+    """(S + 1, k, l) int64 targets, one per availability segment."""
+    mu = np.asarray(mu, dtype=np.float64)
+    mix = np.asarray(mix, dtype=np.int64)
+    n_seg = real.scale.shape[0]
+    base = np.asarray(policy.solve_target(mu, mix), dtype=np.int64)
+    if not refresh:
+        return np.broadcast_to(base, (n_seg,) + base.shape).copy()
+
+    floor = _CRASH_MU_REL * float(mu.max())
+    scaled = [np.maximum(mu * np.maximum(real.scale[s], 0.0)[None, :], floor)
+              for s in range(n_seg)]
+    unchanged = [bool((real.scale[s] == 1.0).all()) for s in range(n_seg)]
+    if policy.supports_jax_batch:
+        mus = np.stack([policy.device_mu(m) for m in scaled])
+        tgts, _, _ = solve_targets_grid_jax(
+            mus, mix[None, :],
+            objective=getattr(policy, "jax_objective", "max-x"),
+            power=getattr(policy, "power", None))
+        out = np.asarray(tgts[:, 0], dtype=np.int64)
+    else:
+        out = np.stack([base if unchanged[s]
+                        else np.asarray(policy.solve_target(scaled[s], mix),
+                                        dtype=np.int64)
+                        for s in range(n_seg)])
+    # Down pools carry zero target: closed solvers park surplus population
+    # on zero-gain columns arbitrarily, and while the availability mask
+    # already makes those slots unroutable, a zero column keeps the
+    # per-segment target an honest statement of where work should sit.
+    out = np.where((real.scale > 0.0)[:, None, :], out, 0)
+    # Healthy segments keep the exact fault-free target so refresh mode is a
+    # no-op outside fault windows (and bit-identical to static there).
+    for s in range(n_seg):
+        if unchanged[s]:
+            out[s] = base
+    return out

@@ -125,6 +125,13 @@ class Policy:
         """Stateless policies: pick the processor for one arriving task."""
         raise NotImplementedError(f"{self.name} is not a stateless policy")
 
+    def repin_target(self, mu: np.ndarray, *, lost: int | None = None,
+                     added: bool = False) -> None:
+        """The topology changed under this policy (`mu` is the post-event
+        matrix). Solver policies re-solve lazily on the next route, so the
+        default is a no-op; policies that PIN a placement (FixedTargetPolicy)
+        must remap it here or the next `solve_target` shape check raises."""
+
 
 _REGISTRY: dict[str, type[Policy]] = {}
 
@@ -296,6 +303,20 @@ class FixedTargetPolicy(Policy):
 
     def solve_target(self, mu, n_tasks):
         return self._fixed
+
+    def repin_target(self, mu, *, lost=None, added=False):
+        tgt = np.asarray(self._fixed, dtype=np.int64)
+        if lost is not None:
+            moved = tgt[:, lost]
+            tgt = np.delete(tgt, lost, axis=1)
+            # re-home the lost column's allocation type-by-type onto the
+            # fastest surviving pool (mu is already the post-event matrix)
+            best = np.argmax(mu, axis=1)
+            np.add.at(tgt, (np.arange(tgt.shape[0]), best), moved)
+        if added:
+            tgt = np.concatenate(
+                [tgt, np.zeros((tgt.shape[0], 1), dtype=np.int64)], axis=1)
+        self._fixed = tgt
 
 
 # ------------------------------ stateless baselines ------------------------
@@ -501,6 +522,16 @@ def deficit_route_jax(target, rank, counts, t):
     return jnp.argmax(deficit * target.shape[1] - rank[t])
 
 
+def deficit_route_masked_jax(target, rank, counts, t, avail):
+    """`deficit_route_jax` restricted to available pools (`repro.faults`):
+    crashed pools drop out of the argmax via an integer -inf sentinel, so
+    with every pool available the key — and therefore the decision — is
+    identical to the unmasked rule."""
+    deficit = target[t] - counts[t]
+    key = deficit * target.shape[1] - rank[t]
+    return jnp.argmax(jnp.where(avail, key, jnp.int32(-(2**30))))
+
+
 @jax.jit
 def _route_many_kernel(target, rank, counts0, types, valid):
     """Sequential largest-deficit dispatch of a burst, on device. `types` is
@@ -544,11 +575,15 @@ class SchedulerCore:
 
     def __init__(self, policy: str | Policy, mu: np.ndarray, *,
                  rate_alpha: float = 0.3,
-                 resolve_rate_rel_change: float = 0.25, seed: int = 0):
+                 resolve_rate_rel_change: float = 0.25, seed: int = 0,
+                 refresh_on_topology: bool = False):
         self.policy = get_policy(policy)
         self._rate_alpha = rate_alpha
         self._resolve_threshold = resolve_rate_rel_change
         self._seed = seed
+        # Opt-in: pool_lost/pool_added repin the policy's pinned target to
+        # the new pool set instead of leaving it to raise on the next route.
+        self.refresh_on_topology = refresh_on_topology
         self.reset(mu)
 
     # ---------------- lifecycle ----------------
@@ -899,7 +934,23 @@ class SchedulerCore:
         """Undo the most recent `route` of a task that was never admitted
         (admission shed or a full finite queue): the exact inverse of the
         count/backlog update, with no EWMA or rate-refresh side effects —
-        the task never ran, so there is nothing to observe."""
+        the task never ran, so there is nothing to observe.
+
+        Guards: a pool index from before a pool_lost/pool_added is stale
+        (columns shifted), and undoing a route that is not on the books
+        would drive counts negative — both corrupt deficit routing silently,
+        so they raise instead."""
+        if not 0 <= pool < self.l:
+            raise IndexError(
+                f"unroute pool {pool} out of range for l={self.l} pools "
+                "(stale index from before a pool_lost/pool_added? remap it "
+                "to the post-event column)")
+        if self._counts_rows[task_type][pool] <= 0:
+            raise ValueError(
+                f"unroute(type={task_type}, pool={pool}) has no matching "
+                "route on the books (counts would go negative). Topology "
+                "events do not migrate in-flight counts; unroute on the "
+                "pre-event pool before applying pool_lost/pool_added.")
         self._counts_rows[task_type][pool] -= 1
         b = self._backlog[pool] - self._inv_mu_rows[task_type][pool]
         self._backlog[pool] = b if b > 0.0 else 0.0
@@ -943,6 +994,8 @@ class SchedulerCore:
         t = self.tracker
         t.rates = np.delete(t.rates, pool)
         t.seen = np.delete(t.seen, pool)
+        if self.refresh_on_topology:
+            self.policy.repin_target(self.mu, lost=pool)
 
     def pool_added(self, mu_column: np.ndarray) -> None:
         mu_column = np.asarray(mu_column, dtype=np.float64)
@@ -955,6 +1008,8 @@ class SchedulerCore:
         t = self.tracker
         t.rates = np.append(t.rates, 0.0)
         t.seen = np.append(t.seen, False)
+        if self.refresh_on_topology:
+            self.policy.repin_target(self.mu, added=True)
 
 
 def as_core(policy: str | Policy | SchedulerCore, mu: np.ndarray,

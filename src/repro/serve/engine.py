@@ -101,3 +101,30 @@ def request_service_fns(engine: ServeEngine, batch: dict, toks,
 
     return [{0: prefill_task, 1: slow(decode_task, slowdown)},
             {0: slow(prefill_task, slowdown), 1: decode_task}]
+
+
+def with_retries(service_fn, *, max_attempts: int = 3,
+                 retryable: tuple = (RuntimeError, OSError),
+                 on_wasted=None):
+    """Wrap one service fn with transient-failure re-execution.
+
+    The serving analogue of `repro.faults` transient task failures: a
+    retryable exception loses the whole attempt (full re-execution — there
+    is no mid-request checkpoint in serving), the task re-runs up to
+    `max_attempts` times, and every lost attempt is reported through
+    `on_wasted(attempt_index)` so a driver can account wasted work against
+    goodput. Non-retryable exceptions and exhaustion propagate.
+    """
+    if max_attempts < 1:
+        raise ValueError(f"max_attempts must be >= 1, got {max_attempts}")
+
+    def wrapped(size):
+        for attempt in range(max_attempts):
+            try:
+                return service_fn(size)
+            except retryable:
+                if on_wasted is not None:
+                    on_wasted(attempt)
+                if attempt + 1 >= max_attempts:
+                    raise
+    return wrapped

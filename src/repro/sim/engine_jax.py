@@ -52,6 +52,7 @@ import jax.numpy as jnp
 
 from repro.core.affinity import PowerModel, PROPORTIONAL_POWER
 from repro.sched.api import (_mu_tiebreak_ranks, deficit_route_jax,
+                             deficit_route_masked_jax,
                              solve_targets_grid_jax, solve_targets_jax)
 
 _BIG_STAMP = np.int32(2**31 - 1)
@@ -117,17 +118,31 @@ def _expected_mix(probs: np.ndarray, n: int) -> np.ndarray:
 
 @functools.partial(jax.jit, static_argnames=("order", "dist_specs",
                                              "n_steps", "warmup", "cls_of",
-                                             "has_mix"))
-def _simulate_fleet(mu, P, target, rank, types0, keys, modes, mix_probs, *,
-                    order, dist_specs, n_steps, warmup, cls_of, has_mix):
+                                             "has_mix", "has_faults",
+                                             "n_faults", "n_target"))
+def _simulate_fleet(mu, P, target, rank, types0, keys, modes, mix_probs,
+                    f_times, f_scale, seg_tgt, period, overhead, fail_p,
+                    fail_capv, *, order, dist_specs, n_steps, warmup, cls_of,
+                    has_mix, has_faults, n_faults, n_target):
     """vmapped scan core. All array args carry a leading batch axis B:
     mu/P/target/rank (B, k, l), types0 (B, n), keys (B, 2), modes (B,),
     mix_probs (B, k). `cls_of` is the static (k,) type -> class map and
-    `dist_specs` the per-class size-distribution specs (len 1: shared)."""
+    `dist_specs` the per-class size-distribution specs (len 1: shared).
+
+    Fault extension (`repro.faults`): f_times (B, S) breakpoints with
+    f_scale (B, S + 1, l) per-segment mu multipliers, seg_tgt
+    (B, S + 1, k, l) per-segment routing targets, period / overhead (B,)
+    the checkpoint-restart model, fail_p / fail_capv (B,) the per-attempt
+    transient-failure draw (fold_in(sub, 3) substream). `n_steps` is the
+    scan budget; the run freezes after `n_target` successful completions
+    (a completion counter replaces the scan index for window bookkeeping).
+    With has_faults=False every fault branch is dropped at trace time and
+    the compiled program — and its results — are unchanged."""
     samplers = [_size_sampler(s) for s in dist_specs]
     n_cls = max(cls_of) + 1
 
-    def one(mu, P, target, rank, types0, key, mode, mix_p):
+    def one(mu, P, target, rank, types0, key, mode, mix_p, f_times, f_scale,
+            seg_tgt, period, overhead, fail_p, fail_capv):
         k, l = mu.shape
         n = types0.shape[0]
         order_ps = order == "PS"
@@ -144,12 +159,23 @@ def _simulate_fleet(mu, P, target, rank, types0, keys, modes, mix_probs, *,
             # small C: draw every class's candidate, keep the task's
             return jnp.stack([s(skey) for s in samplers])[cls_arr[t]]
 
-        def route_one(counts, backlog, t, rkey):
-            j_def = deficit_route_jax(target, rank, counts, t)
-            j_jsq = jnp.argmin(counts.sum(0))
-            j_lb = jnp.argmin(backlog)
-            j_bf = jnp.argmax(mu[t])
-            j_rd = jax.random.randint(rkey, (), 0, l)
+        def route_one(counts, backlog, t, rkey, avail=None, tgt=None):
+            if avail is None:
+                j_def = deficit_route_jax(target, rank, counts, t)
+                j_jsq = jnp.argmin(counts.sum(0))
+                j_lb = jnp.argmin(backlog)
+                j_bf = jnp.argmax(mu[t])
+                j_rd = jax.random.randint(rkey, (), 0, l)
+            else:
+                j_def = deficit_route_masked_jax(tgt, rank, counts, t, avail)
+                j_jsq = jnp.argmin(jnp.where(avail, counts.sum(0),
+                                             jnp.int32(2**30)))
+                j_lb = jnp.argmin(jnp.where(avail, backlog, jnp.inf))
+                j_bf = jnp.argmax(jnp.where(avail, mu[t], -jnp.inf))
+                na = avail.astype(jnp.int32).sum()
+                r = jax.random.randint(rkey, (), 0, jnp.maximum(na, 1))
+                j_rd = jnp.searchsorted(jnp.cumsum(avail.astype(jnp.int32)),
+                                        r + 1)
             return jnp.where(mode == MODE_JSQ, j_jsq,
                              jnp.where(mode == MODE_LB, j_lb,
                                        jnp.where(mode == MODE_RD, j_rd,
@@ -180,50 +206,100 @@ def _simulate_fleet(mu, P, target, rank, types0, keys, modes, mix_probs, *,
             (types0, sizes0, init_keys))
         need0 = sizes0 / mu[types0, proc0]
 
+        if has_faults:
+            # (sp, ncomp, fails_used, size0, wasted, failcnt, rrp_s, rrp_n,
+            #  rr_s, rr_n, topo)
+            fstate = (jnp.int32(0), jnp.int32(0), jnp.zeros(n, jnp.int32),
+                      sizes0, jnp.float32(0.0), jnp.float32(0.0),
+                      jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0),
+                      jnp.float32(0.0), jnp.int32(0))
+        else:
+            fstate = ()
         state = (key, jnp.float32(0.0), proc0, need0, need0, sizes0,
                  jnp.zeros(n, jnp.float32), jnp.arange(n, dtype=jnp.int32),
                  counts0, jnp.float32(0.0),
                  jnp.zeros(n_cls, jnp.float32), jnp.zeros(n_cls, jnp.float32),
                  jnp.zeros(n_cls, jnp.float32), jnp.float32(0.0),
-                 jnp.zeros((k, l), jnp.float32), types0, run0)
+                 jnp.zeros((k, l), jnp.float32), types0, run0, fstate)
 
         def step(state, i):
             (key, now, proc, remaining, need, size_left, entry, stamp,
              counts, t_start, resp_c, energy_c, meas_c, sum_power, occ,
-             types, run_pid) = state
+             types, run_pid, fstate) = state
+            if has_faults:
+                (sp, ncomp, fails_used, size0, wasted, failcnt, rrp_s,
+                 rrp_n, rr_s, rr_n, topo) = fstate
+                sc = f_scale[sp]                   # (l,) current segment
+                availp = sc > 0.0
+                sc_safe = jnp.where(availp, sc, 1.0)
+                tgt_cur = seg_tgt[sp]
+                alive = ncomp < n_target           # freeze when done
             mask = proc[:, None] == cols[None, :]                # (n, l)
             cnt = mask.sum(0)
             cntf = cnt.astype(jnp.float32)
             if order_ps:
                 rem_col = jnp.where(mask, remaining[:, None], jnp.inf)
-                dtj = jnp.where(cnt > 0, rem_col.min(0) * cntf, jnp.inf)
-                # occupancy-weighted draw: each resident burns P/c_j
-                pw = (P[types, proc] / cntf[proc]).sum()
+                if has_faults:
+                    dtj = jnp.where((cnt > 0) & availp,
+                                    rem_col.min(0) * cntf / sc_safe, jnp.inf)
+                    pw = (P[types, proc] * sc[proc] / cntf[proc]).sum()
+                else:
+                    dtj = jnp.where(cnt > 0, rem_col.min(0) * cntf, jnp.inf)
+                    # occupancy-weighted draw: each resident burns P/c_j
+                    pw = (P[types, proc] / cntf[proc]).sum()
             elif order_prio:
                 rp = jnp.maximum(run_pid, 0)
-                dtj = jnp.where(cnt > 0, remaining[rp], jnp.inf)
-                pw = jnp.where(cnt > 0, P[types[rp], cols], 0.0).sum()
+                if has_faults:
+                    dtj = jnp.where((cnt > 0) & availp,
+                                    remaining[rp] / sc_safe, jnp.inf)
+                    pw = jnp.where(cnt > 0, P[types[rp], cols] * sc,
+                                   0.0).sum()
+                else:
+                    dtj = jnp.where(cnt > 0, remaining[rp], jnp.inf)
+                    pw = jnp.where(cnt > 0, P[types[rp], cols], 0.0).sum()
             else:
                 stamp_col = jnp.where(mask, stamp[:, None], _BIG_STAMP)
                 head = jnp.argmin(stamp_col, axis=0)             # (l,)
-                dtj = jnp.where(cnt > 0, remaining[head], jnp.inf)
-                # heads run alone at full rate; idle columns draw nothing
-                pw = jnp.where(cnt > 0, P[types[head], cols], 0.0).sum()
+                if has_faults:
+                    dtj = jnp.where((cnt > 0) & availp,
+                                    remaining[head] / sc_safe, jnp.inf)
+                    pw = jnp.where(cnt > 0, P[types[head], cols] * sc,
+                                   0.0).sum()
+                else:
+                    dtj = jnp.where(cnt > 0, remaining[head], jnp.inf)
+                    # heads run alone at full rate; idle columns draw nothing
+                    pw = jnp.where(cnt > 0, P[types[head], cols], 0.0).sum()
             j_star = jnp.argmin(dtj)
-            dt = dtj[j_star]
+            if has_faults:
+                if n_faults > 0:
+                    tf = jnp.where(sp < n_faults,
+                                   f_times[jnp.clip(sp, 0, n_faults - 1)],
+                                   jnp.inf)
+                else:
+                    tf = jnp.float32(jnp.inf)
+                dt_c = dtj[j_star]
+                do_fault = alive & jnp.isfinite(tf) & (tf - now <= dt_c)
+                do_comp = alive & (~do_fault) & jnp.isfinite(dt_c)
+                dt = jnp.where(do_fault, tf - now,
+                               jnp.where(do_comp, dt_c, 0.0))
+            else:
+                dt = dtj[j_star]
             now = now + dt
             if order_ps:
-                dep = dt / cntf[proc]                            # (n,)
+                dep = (dt * sc[proc] / cntf[proc] if has_faults
+                       else dt / cntf[proc])                     # (n,)
                 remaining = remaining - dep
                 pid = jnp.argmin(jnp.where(proc == j_star, remaining, jnp.inf))
             elif order_prio:
                 is_run = run_pid[proc] == idx_n
-                dep = jnp.where(is_run, dt, 0.0)
+                dep = (jnp.where(is_run, dt * sc[proc], 0.0) if has_faults
+                       else jnp.where(is_run, dt, 0.0))
                 remaining = remaining - dep
                 pid = run_pid[j_star]
             else:
                 is_head = idx_n == head[proc]
-                dep = jnp.where(is_head, dt, 0.0)
+                dep = (jnp.where(is_head, dt * sc[proc], 0.0) if has_faults
+                       else jnp.where(is_head, dt, 0.0))
                 remaining = remaining - dep
                 pid = head[j_star]
             # true remaining work depletes with service received (host compat
@@ -232,16 +308,35 @@ def _simulate_fleet(mu, P, target, rank, types0, keys, modes, mix_probs, *,
             size_left = jnp.maximum(size_left - frac * size_left, 0.0)
 
             t = types[pid]
-            in_win = i >= warmup
-            winf = jnp.where(in_win, 1.0, 0.0)
+            if has_faults:
+                key, sub = jax.random.split(key)
+                u_fail = jax.random.uniform(jax.random.fold_in(sub, 3),
+                                            dtype=jnp.float32)
+                fail_now = (do_comp & (u_fail < fail_p)
+                            & (fails_used[pid] < fail_capv))
+                succ = do_comp & ~fail_now
+                in_win = ncomp >= warmup
+                winf = jnp.where(succ & in_win, 1.0, 0.0)
+            else:
+                succ = None
+                in_win = i >= warmup
+                winf = jnp.where(in_win, 1.0, 0.0)
             occ = occ + jnp.where(in_win, dt, 0.0) * counts.astype(jnp.float32)
-            counts = counts.at[t, j_star].add(-1)
+            if has_faults:
+                counts = counts.at[t, j_star].add(
+                    -jnp.where(succ, 1, 0).astype(jnp.int32))
+            else:
+                counts = counts.at[t, j_star].add(-1)
             c = cls_arr[t]
             resp_c = resp_c.at[c].add(winf * (now - entry[pid]))
             energy_c = energy_c.at[c].add(winf * P[t, j_star] * need[pid])
             meas_c = meas_c.at[c].add(winf)
             sum_power = sum_power + jnp.where(in_win, dt, 0.0) * pw
-            t_start = jnp.where(i == warmup - 1, now, t_start)
+            if has_faults:
+                t_start = jnp.where(succ & (ncomp == warmup - 1), now,
+                                    t_start)
+            else:
+                t_start = jnp.where(i == warmup - 1, now, t_start)
 
             if order_prio:
                 # next head: oldest waiting (smallest stamp) of the best
@@ -249,57 +344,155 @@ def _simulate_fleet(mu, P, target, rank, types0, keys, modes, mix_probs, *,
                 waiting = (proc == j_star) & (idx_n != pid)
                 pkey = cls_arr[types] * stamp_cap + stamp
                 nxt = jnp.argmin(jnp.where(waiting, pkey, _BIG_STAMP))
-                run_pid = run_pid.at[j_star].set(
-                    jnp.where(waiting.any(), nxt.astype(jnp.int32), -1))
+                new_head = jnp.where(waiting.any(), nxt.astype(jnp.int32), -1)
+                if has_faults:
+                    run_pid = run_pid.at[j_star].set(
+                        jnp.where(succ, new_head, run_pid[j_star]))
+                else:
+                    run_pid = run_pid.at[j_star].set(new_head)
+
+            if has_faults:
+                # transient failure: rewind to the last checkpoint + overhead
+                done_f = need[pid]
+                pres_f = jnp.where(
+                    jnp.isfinite(period),
+                    jnp.floor(done_f / jnp.maximum(period, 1e-30))
+                    * jnp.where(jnp.isfinite(period), period, 0.0), 0.0)
+                newrem_f = done_f - pres_f + overhead
+                wasted = wasted + jnp.where(fail_now & in_win,
+                                            done_f - pres_f, 0.0)
+                failcnt = failcnt + jnp.where(fail_now & in_win, 1.0, 0.0)
+                fails_used = fails_used.at[pid].add(
+                    jnp.where(fail_now, 1, 0).astype(jnp.int32))
+                remaining = remaining.at[pid].set(
+                    jnp.where(fail_now, newrem_f, remaining[pid]))
+                size_left = size_left.at[pid].set(jnp.where(
+                    fail_now,
+                    size0[pid] * jnp.clip(newrem_f
+                                          / jnp.maximum(done_f, 1e-30),
+                                          0.0, 1.0),
+                    size_left[pid]))
+                # re-route latency: crash -> next successful completion
+                flush = succ & (rrp_n > 0)
+                rr_s = rr_s + jnp.where(flush, now * rrp_n - rrp_s, 0.0)
+                rr_n = rr_n + jnp.where(flush, rrp_n, 0.0)
+                rrp_s = jnp.where(flush, 0.0, rrp_s)
+                rrp_n = jnp.where(flush, 0.0, rrp_n)
+                # ---- fault-event branch (identity unless do_fault) ----
+                sp_new = sp + jnp.where(do_fault, 1, 0).astype(sp.dtype)
+                sc_next = f_scale[sp_new]
+                crash_col = do_fault & (sc > 0.0) & (sc_next <= 0.0)  # (l,)
+                hit = crash_col[proc]
+                done_t = jnp.clip(need - remaining, 0.0, None)
+                pres_t = jnp.where(
+                    jnp.isfinite(period),
+                    jnp.floor(done_t / jnp.maximum(period, 1e-30))
+                    * jnp.where(jnp.isfinite(period), period, 0.0), 0.0)
+                newrem_t = need - pres_t + overhead
+                wasted = wasted + jnp.where(
+                    in_win, jnp.where(hit, done_t - pres_t, 0.0).sum(), 0.0)
+                remaining = jnp.where(hit, newrem_t, remaining)
+                size_left = jnp.where(
+                    hit, size0 * jnp.clip(newrem_t / jnp.maximum(need, 1e-30),
+                                          0.0, 1.0), size_left)
+                any_crash = do_fault & crash_col.any()
+                topo = topo + jnp.where(any_crash, 1, 0).astype(jnp.int32)
+                rrp_s = rrp_s + jnp.where(any_crash, now, 0.0)
+                rrp_n = rrp_n + jnp.where(any_crash, 1.0, 0.0)
+                sp = sp_new
 
             # closed system: the program's next task routes immediately (the
             # completed task is gone from the LB backlog, like the host view)
-            size_left = size_left.at[pid].set(0.0)
-            key, sub = jax.random.split(key)
+            if has_faults:
+                size_left = size_left.at[pid].set(
+                    jnp.where(succ, 0.0, size_left[pid]))
+            else:
+                size_left = size_left.at[pid].set(0.0)
+                key, sub = jax.random.split(key)
             if has_mix:
                 t_new = jax.random.categorical(
                     jax.random.fold_in(sub, 2), logp).astype(jnp.int32)
             else:
                 t_new = t
-            types = types.at[pid].set(t_new)
             backlog = jnp.where(mask, size_left[:, None], 0.0).sum(0)
-            j_new = route_one(counts, backlog, t_new,
-                              jax.random.fold_in(sub, 1))
-            counts = counts.at[t_new, j_new].add(1)
-            s_new = sample_for(sub, t_new)
-            sn = s_new / mu[t_new, j_new]
-            remaining = remaining.at[pid].set(sn)
-            need = need.at[pid].set(sn)
-            size_left = size_left.at[pid].set(s_new)
-            entry = entry.at[pid].set(now)
-            proc = proc.at[pid].set(j_new)
-            stamp = stamp.at[pid].set(n + i)
-            if order_prio:
-                run_pid = run_pid.at[j_new].set(
-                    jnp.where(run_pid[j_new] < 0, pid, run_pid[j_new]))
+            if has_faults:
+                types = types.at[pid].set(
+                    jnp.where(succ, t_new, types[pid]))
+                j_new = route_one(counts, backlog, t_new,
+                                  jax.random.fold_in(sub, 1), availp,
+                                  tgt_cur)
+                adm_i = jnp.where(succ, 1, 0).astype(jnp.int32)
+                counts = counts.at[t_new, j_new].add(adm_i)
+                s_new = sample_for(sub, t_new)
+                sn = s_new / mu[t_new, j_new]
+                remaining = remaining.at[pid].set(
+                    jnp.where(succ, sn, remaining[pid]))
+                need = need.at[pid].set(jnp.where(succ, sn, need[pid]))
+                size_left = size_left.at[pid].set(
+                    jnp.where(succ, s_new, size_left[pid]))
+                size0 = size0.at[pid].set(jnp.where(succ, s_new, size0[pid]))
+                entry = entry.at[pid].set(jnp.where(succ, now, entry[pid]))
+                proc = proc.at[pid].set(jnp.where(succ, j_new, proc[pid]))
+                stamp = stamp.at[pid].set(jnp.where(succ, n + i, stamp[pid]))
+                fails_used = fails_used.at[pid].set(
+                    jnp.where(succ, 0, fails_used[pid]))
+                if order_prio:
+                    run_pid = run_pid.at[j_new].set(
+                        jnp.where(succ & (run_pid[j_new] < 0), pid,
+                                  run_pid[j_new]))
+                ncomp = ncomp + jnp.where(succ, 1, 0).astype(jnp.int32)
+                fstate = (sp, ncomp, fails_used, size0, wasted, failcnt,
+                          rrp_s, rrp_n, rr_s, rr_n, topo)
+            else:
+                types = types.at[pid].set(t_new)
+                j_new = route_one(counts, backlog, t_new,
+                                  jax.random.fold_in(sub, 1))
+                counts = counts.at[t_new, j_new].add(1)
+                s_new = sample_for(sub, t_new)
+                sn = s_new / mu[t_new, j_new]
+                remaining = remaining.at[pid].set(sn)
+                need = need.at[pid].set(sn)
+                size_left = size_left.at[pid].set(s_new)
+                entry = entry.at[pid].set(now)
+                proc = proc.at[pid].set(j_new)
+                stamp = stamp.at[pid].set(n + i)
+                if order_prio:
+                    run_pid = run_pid.at[j_new].set(
+                        jnp.where(run_pid[j_new] < 0, pid, run_pid[j_new]))
+                fstate = ()
             return (key, now, proc, remaining, need, size_left, entry, stamp,
                     counts, t_start, resp_c, energy_c, meas_c, sum_power,
-                    occ, types, run_pid), None
+                    occ, types, run_pid, fstate), None
 
         state, _ = jax.lax.scan(step, state,
                                 jnp.arange(n_steps, dtype=jnp.int32))
         (_, now, _, _, _, _, _, _, _, t_start, resp_c, energy_c, meas_c,
-         sum_power, occ, _, _) = state
-        measured = jnp.float32(n_steps - warmup)
+         sum_power, occ, _, _, fstate) = state
+        if has_faults:
+            (_, ncomp, _, _, wasted, failcnt, _, _, rr_s, rr_n,
+             topo) = fstate
+            measured = jnp.maximum(ncomp - warmup, 0).astype(jnp.float32)
+        else:
+            measured = jnp.float32(n_steps - warmup)
         elapsed = now - t_start
         x = measured / elapsed
-        return (x, resp_c.sum() / measured, energy_c.sum() / measured,
+        base = (x, resp_c.sum() / measured, energy_c.sum() / measured,
                 elapsed, occ / elapsed, sum_power / elapsed, meas_c, resp_c,
                 energy_c)
+        if has_faults:
+            return base + (wasted, failcnt, rr_s, rr_n, topo)
+        return base
 
-    return jax.vmap(one)(mu, P, target, rank, types0, keys, modes, mix_probs)
+    return jax.vmap(one)(mu, P, target, rank, types0, keys, modes, mix_probs,
+                         f_times, f_scale, seg_tgt, period, overhead, fail_p,
+                         fail_capv)
 
 
 def simulate_batch(mu, targets, types0, seeds, *, distribution, order="PS",
                    n_completions, warmup_completions,
                    power: PowerModel = PROPORTIONAL_POWER, modes=None,
                    class_of_type=None, class_distributions=None,
-                   type_mix=None):
+                   type_mix=None, faults=None):
     """Simulate B closed networks in one device call.
 
     mu: (k, l) shared or (B, k, l) per-point; targets: (B, k, l) pinned
@@ -318,6 +511,16 @@ def simulate_batch(mu, targets, types0, seeds, *, distribution, order="PS",
     mean_power is the occupancy-weighted P_ij integral over the measurement
     window divided by elapsed (mean_power / throughput is the
     trajectory-measured E[E], eq. 19).
+
+    `faults` (a `repro.faults.FaultBatch`, `build_fault_batch(...,
+    mode="closed", n_completions=...)`) turns on the fault core: per-point
+    crash/degrade schedules, per-attempt transient failures and the
+    checkpoint-restart model; the result dict then gains goodput /
+    wasted_work / failures / topology_events / reroute_latency rows
+    (recovery_time is NaN in closed mode — the population is constant, so
+    there is no pre-crash level to recover to). Incompatible with
+    `type_mix`. With faults=None the compiled program is the pre-fault
+    one, byte for byte.
     """
     targets = np.asarray(targets)
     B, k, l = targets.shape
@@ -363,14 +566,45 @@ def simulate_batch(mu, targets, types0, seeds, *, distribution, order="PS",
         P = np.stack([power.power_matrix(m) for m in mus])
         ranks = np.stack([_mu_tiebreak_ranks(m) for m in mus])
     keys = np.stack([np.asarray(jax.random.PRNGKey(int(s))) for s in seeds])
-    x, et, ee, elapsed, occ, pw, meas_c, resp_c, energy_c = _simulate_fleet(
+    has_faults = faults is not None
+    if has_faults:
+        if has_mix:
+            raise ValueError("faults + type_mix is not supported in closed "
+                             "mode (the host oracle raises the same)")
+        if faults.fail_prob is None or faults.fail_cap is None:
+            raise ValueError("closed-mode FaultBatch required "
+                             "(build_fault_batch(..., mode='closed'))")
+        if faults.times.shape[0] != B or faults.scale.shape[2] != l:
+            raise ValueError("FaultBatch batch/pool dims do not match")
+        n_faults = faults.n_events
+        n_steps = int(n_completions) + int(faults.extra_steps)
+        f_times = jnp.asarray(faults.times, jnp.float32)
+        f_scale = jnp.asarray(faults.scale, jnp.float32)
+        seg_tgt = jnp.asarray(faults.seg_targets, jnp.int32)
+        f_period = jnp.asarray(faults.ckpt_period, jnp.float32)
+        f_over = jnp.asarray(faults.restart_overhead, jnp.float32)
+        f_prob = jnp.asarray(faults.fail_prob, jnp.float32)
+        f_cap = jnp.asarray(faults.fail_cap, jnp.int32)
+    else:
+        n_faults, n_steps = 0, int(n_completions)
+        f_times = jnp.zeros((B, 0), jnp.float32)
+        f_scale = jnp.ones((B, 1, l), jnp.float32)
+        seg_tgt = jnp.zeros((B, 1, k, l), jnp.int32)
+        f_period = jnp.full(B, np.inf, jnp.float32)
+        f_over = jnp.zeros(B, jnp.float32)
+        f_prob = jnp.zeros(B, jnp.float32)
+        f_cap = jnp.zeros(B, jnp.int32)
+    out_dev = _simulate_fleet(
         jnp.asarray(mus, jnp.float32), jnp.asarray(P, jnp.float32),
         jnp.asarray(targets, jnp.int32), jnp.asarray(ranks), types0,
         jnp.asarray(keys), jnp.asarray(modes),
-        jnp.asarray(mix_probs, jnp.float32), order=order,
-        dist_specs=dist_specs, n_steps=int(n_completions),
+        jnp.asarray(mix_probs, jnp.float32), f_times, f_scale, seg_tgt,
+        f_period, f_over, f_prob, f_cap, order=order,
+        dist_specs=dist_specs, n_steps=n_steps,
         warmup=int(warmup_completions), cls_of=tuple(int(c) for c in cls),
-        has_mix=has_mix)
+        has_mix=has_mix, has_faults=has_faults, n_faults=n_faults,
+        n_target=int(n_completions))
+    x, et, ee, elapsed, occ, pw, meas_c, resp_c, energy_c = out_dev[:9]
     x, et, ee, pw = (np.asarray(v, np.float64) for v in (x, et, ee, pw))
     occ = np.asarray(occ, np.float64)
     meas_c, resp_c, energy_c = (np.asarray(v, np.float64)
@@ -387,13 +621,27 @@ def simulate_batch(mu, targets, types0, seeds, *, distribution, order="PS",
                           np.inf)
     cls_occ = np.zeros((B, C, l))
     np.add.at(cls_occ, (slice(None), cls), occ)
-    return {"throughput": x, "mean_response_time": et, "mean_energy": ee,
-            "edp": ee * et, "little_product": x * et,
-            "completed": np.full(B, n_completions - warmup_completions),
-            "elapsed": elapsed_np,
-            "state_occupancy": occ, "mean_power": pw,
-            "class_throughput": cls_x, "class_response_time": cls_rt,
-            "class_energy": cls_ee, "class_occupancy": cls_occ}
+    completed = (meas_c.sum(axis=1).astype(np.int64) if has_faults
+                 else np.full(B, n_completions - warmup_completions))
+    res = {"throughput": x, "mean_response_time": et, "mean_energy": ee,
+           "edp": ee * et, "little_product": x * et,
+           "completed": completed, "elapsed": elapsed_np,
+           "state_occupancy": occ, "mean_power": pw,
+           "class_throughput": cls_x, "class_response_time": cls_rt,
+           "class_energy": cls_ee, "class_occupancy": cls_occ}
+    if has_faults:
+        wasted, failcnt, rr_s, rr_n, topo = (
+            np.asarray(v, np.float64) for v in out_dev[9:])
+        el = np.maximum(elapsed_np, 1e-12)
+        res["goodput"] = x
+        res["wasted_work"] = wasted / el
+        res["failures"] = failcnt.astype(np.int64)
+        res["topology_events"] = topo.astype(np.int64)
+        res["reroute_latency"] = np.where(rr_n > 0,
+                                          rr_s / np.maximum(rr_n, 1.0),
+                                          np.nan)
+        res["recovery_time"] = np.full(B, np.nan)
+    return res
 
 
 def _types0_for(mix: np.ndarray) -> np.ndarray:
@@ -439,13 +687,21 @@ def simulate_policy_jax(cfg, core) -> "SimMetrics":
     mode = _device_route_mode(core.policy)
     target = (np.asarray(core.policy.solve_target(mu, mix))
               if mode == MODE_DEFICIT else np.zeros(mu.shape, np.int64))
+    faults = None
+    if getattr(cfg, "faults", None) is not None and not cfg.faults.is_null:
+        from repro.faults.device import build_fault_batch
+        faults = build_fault_batch(
+            [cfg.faults], mu, target[None], seeds=[cfg.seed], mode="closed",
+            policies=[core.policy], mixes=mix[None],
+            n_completions=cfg.n_completions)
     out = simulate_batch(
         mu, target[None], t0[None], [cfg.seed],
         distribution=cfg.distribution, order=cfg.order,
         n_completions=cfg.n_completions,
         warmup_completions=cfg.warmup_completions, power=cfg.power,
         modes=[mode], class_of_type=cfg.class_of_type,
-        class_distributions=cfg.class_distributions, type_mix=cfg.type_mix)
+        class_distributions=cfg.class_distributions, type_mix=cfg.type_mix,
+        faults=faults)
     return _metrics_row(out, 0)
 
 
@@ -464,7 +720,14 @@ def _metrics_row(out: dict, i: int) -> "SimMetrics":
         class_throughput=out["class_throughput"][i],
         class_response_time=out["class_response_time"][i],
         class_energy=out["class_energy"][i],
-        class_occupancy=out["class_occupancy"][i])
+        class_occupancy=out["class_occupancy"][i],
+        **({"goodput": float(out["goodput"][i]),
+            "wasted_work": float(out["wasted_work"][i]),
+            "failures": int(out["failures"][i]),
+            "topology_events": int(out["topology_events"][i]),
+            "reroute_latency": float(out["reroute_latency"][i]),
+            "recovery_time": float(out["recovery_time"][i])}
+           if "goodput" in out else {}))
 
 
 def sweep_jax(cfg, policy, *, mixes=None, seeds=None, mus=None):

@@ -87,6 +87,12 @@ class SimConfig:
     # per-processor queues (traffic.queue_capacity) bound the population.
     # None = the closed network above, bit-identical to pre-traffic runs.
     traffic: "object | None" = None
+    # Fault scenario (repro.faults.FaultScenario): crash/recovery and
+    # degraded-mu events, transient task failures, checkpoint-restart costs,
+    # hedged dispatch (open mode only) and target refresh on topology
+    # events. None — or a scenario whose events never fire — leaves every
+    # fault-free trajectory bit-identical (dedicated RNG substreams).
+    faults: "object | None" = None
 
 
 @dataclasses.dataclass
@@ -124,6 +130,22 @@ class SimMetrics:
     class_dropped: np.ndarray | None = None
     class_quantiles: np.ndarray | None = None
     class_deadline_met: np.ndarray | None = None
+    # Resilience extras (SimConfig.faults); None on fault-free runs.
+    # goodput = successful in-window completions / elapsed (== throughput:
+    # failed attempts and cancelled hedge partners never count); wasted_work
+    # = lost alone-seconds of work (crash rewinds past the last checkpoint,
+    # failed attempts, cancelled hedge duplicates) / elapsed; failures
+    # counts in-window transient failures; topology_events counts crash
+    # breakpoints; reroute_latency averages crash -> next successful
+    # completion; recovery_time averages crash -> population back at its
+    # pre-crash level (open mode; NaN in closed mode, where the population
+    # never moves).
+    goodput: float | None = None
+    wasted_work: float | None = None
+    failures: int | None = None
+    topology_events: int | None = None
+    reroute_latency: float | None = None
+    recovery_time: float | None = None
 
 
 class ClosedNetworkSimulator:
@@ -156,11 +178,28 @@ class ClosedNetworkSimulator:
             if cfg.type_mix is not None:
                 raise ValueError("type_mix is a closed-network knob; open "
                                  "mode draws types from traffic.spec")
+        if cfg.faults is not None:
+            if cfg.faults.hedge_classes and cfg.traffic is None:
+                raise ValueError("hedge_classes require open/traffic mode "
+                                 "(a closed network has no duplicate "
+                                 "admission slot)")
+            if cfg.type_mix is not None and not cfg.faults.is_null:
+                raise ValueError("faults + type_mix is not supported in "
+                                 "closed mode")
 
     def run(self, policy: str | Policy | SchedulerCore) -> SimMetrics:
         """Simulate under a policy: a registry name ("cab", "grin", "lb",
         ...), a Policy instance, or a prebuilt SchedulerCore (reset here)."""
         core = as_core(policy, self.mu)
+        # Null fault scenarios dispatch to the fault-free loops: trivially
+        # bit-identical, and the fault loops stay exercised only when a
+        # scenario can actually fire.
+        if self.cfg.faults is not None and not self.cfg.faults.is_null:
+            if self.cfg.traffic is not None:
+                from repro.faults.host import run_open_faults
+                return run_open_faults(self, core)
+            from repro.faults.host import run_closed_faults
+            return run_closed_faults(self, core)
         if self.cfg.traffic is not None:
             from repro.traffic.host import run_open
             return run_open(self, core)

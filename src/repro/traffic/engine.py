@@ -38,7 +38,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.affinity import PowerModel, PROPORTIONAL_POWER
-from repro.sched.api import _mu_tiebreak_ranks, deficit_route_jax
+from repro.sched.api import (_mu_tiebreak_ranks, deficit_route_jax,
+                             deficit_route_masked_jax)
 from repro.sim.engine_jax import (MODE_BF, MODE_DEFICIT, MODE_JSQ, MODE_LB,
                                   MODE_RD, _device_route_mode, _dist_spec,
                                   _size_sampler)
@@ -49,30 +50,44 @@ _BIG_STAMP = np.int32(2**31 - 1)
 
 @functools.partial(jax.jit, static_argnames=(
     "order", "dist_specs", "n_arrivals", "n_slots", "warmup", "cls_of",
-    "qcap", "hist_lo", "hist_hi", "hist_bins"))
+    "qcap", "hist_lo", "hist_hi", "hist_bins", "has_faults", "n_faults",
+    "total_steps"))
 def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
-                         admit, deadlines, *, order, dist_specs, n_arrivals,
-                         n_slots, warmup, cls_of, qcap, hist_lo, hist_hi,
-                         hist_bins):
+                         admit, deadlines, f_times, f_scale, seg_tgt,
+                         fail_cnt, hedge_c, period, overhead, *, order,
+                         dist_specs, n_arrivals, n_slots, warmup, cls_of,
+                         qcap, hist_lo, hist_hi, hist_bins, has_faults,
+                         n_faults, total_steps):
     """vmapped open scan core. Batched args: mu/P/target/rank (B, k, l),
     arr_t/arr_ty (B, T), keys (B, 2), modes (B,), admit (B, C) in-system
     caps, deadlines (B, C). Statics: the service order, per-class size
     specs, T, the slot count l * qcap, the arrival-index warmup, the
-    type -> class map, the queue capacity and the histogram geometry."""
+    type -> class map, the queue capacity and the histogram geometry.
+
+    Fault extension (`repro.faults`): f_times (B, S) breakpoints with
+    f_scale (B, S + 1, l) per-segment mu multipliers and seg_tgt
+    (B, S + 1, k, l) per-segment routing targets; fail_cnt (B, T) are the
+    host-realized per-arrival transient-failure counts, hedge_c (B, C)
+    flags hedged classes, period / overhead (B,) the checkpoint-restart
+    model. With has_faults=False every fault branch is dropped at trace
+    time, so the compiled no-fault program — and its results — are
+    unchanged; total_steps then equals 2 * T."""
     samplers = [_size_sampler(s) for s in dist_specs]
     n_cls = max(cls_of) + 1
     T = n_arrivals
     ns = n_slots
     log_g = float(np.log(hist_hi / hist_lo) / hist_bins)
 
-    def one(mu, P, target, rank, arr_t, arr_ty, key, mode, admit, deadlines):
+    def one(mu, P, target, rank, arr_t, arr_ty, key, mode, admit, deadlines,
+            f_times, f_scale, seg_tgt, fail_cnt, hedge_c, period, overhead):
         k, l = mu.shape
         order_ps = order == "PS"
         order_prio = order == "PRIO"
         cls_arr = jnp.asarray(cls_of, jnp.int32)
         idx_s = jnp.arange(ns, dtype=jnp.int32)
         cols = jnp.arange(l)
-        stamp_cap = jnp.int32(2 * T + 2)       # PRIO key stride > any stamp
+        # PRIO key stride > any stamp (stamps are scan indices)
+        stamp_cap = jnp.int32((total_steps if has_faults else 2 * T) + 2)
         t_warm = arr_t[warmup - 1] if warmup > 0 else jnp.float32(0.0)
         t_end = arr_t[T - 1]
 
@@ -81,18 +96,40 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
                 return samplers[0](skey)
             return jnp.stack([s(skey) for s in samplers])[cls_arr[t]]
 
-        def route_one(counts, backlog, t, rkey):
-            j_def = deficit_route_jax(target, rank, counts, t)
-            j_jsq = jnp.argmin(counts.sum(0))
-            j_lb = jnp.argmin(backlog)
-            j_bf = jnp.argmax(mu[t])
-            j_rd = jax.random.randint(rkey, (), 0, l)
+        def route_one(counts, backlog, t, rkey, avail=None, tgt=None):
+            if avail is None:
+                j_def = deficit_route_jax(target, rank, counts, t)
+                j_jsq = jnp.argmin(counts.sum(0))
+                j_lb = jnp.argmin(backlog)
+                j_bf = jnp.argmax(mu[t])
+                j_rd = jax.random.randint(rkey, (), 0, l)
+            else:
+                j_def = deficit_route_masked_jax(tgt, rank, counts, t, avail)
+                j_jsq = jnp.argmin(jnp.where(avail, counts.sum(0),
+                                             jnp.int32(2**30)))
+                j_lb = jnp.argmin(jnp.where(avail, backlog, jnp.inf))
+                j_bf = jnp.argmax(jnp.where(avail, mu[t], -jnp.inf))
+                na = avail.astype(jnp.int32).sum()
+                r = jax.random.randint(rkey, (), 0, jnp.maximum(na, 1))
+                j_rd = jnp.searchsorted(jnp.cumsum(avail.astype(jnp.int32)),
+                                        r + 1)
             return jnp.where(mode == MODE_JSQ, j_jsq,
                              jnp.where(mode == MODE_LB, j_lb,
                                        jnp.where(mode == MODE_RD, j_rd,
                                                  jnp.where(mode == MODE_BF,
                                                            j_bf, j_def))))
 
+        if has_faults:
+            # (sp, fail_left, partner, size0, wasted, failcnt, rrp_s, rrp_n,
+            #  rr_s, rr_n, rec_on, rec_pre, rec_t0, rec_s, rec_n, topo)
+            fstate = (jnp.int32(0), jnp.zeros(ns, jnp.int32),
+                      jnp.full(ns, -1, jnp.int32), jnp.zeros(ns, jnp.float32),
+                      jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0),
+                      jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0),
+                      jnp.bool_(False), jnp.int32(0), jnp.float32(0.0),
+                      jnp.float32(0.0), jnp.float32(0.0), jnp.int32(0))
+        else:
+            fstate = ()
         state = (key, jnp.float32(0.0), jnp.int32(0),
                  jnp.full(ns, -1, jnp.int32),          # proc (-1 = free)
                  jnp.zeros(ns, jnp.int32),             # types
@@ -110,12 +147,21 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
                  jnp.zeros(n_cls, jnp.float32),        # dm_c (deadline met)
                  jnp.zeros(n_cls, jnp.float32),        # drop_c
                  jnp.zeros((k, l), jnp.float32),       # occ
-                 jnp.float32(0.0))                     # power integral
+                 jnp.float32(0.0),                     # power integral
+                 fstate)
 
         def step(state, i):
             (key, now, a_ptr, proc, types, remaining, need, size_left,
              entry, stamp, run_pid, counts, hist, resp_c, meas_c, energy_c,
-             dm_c, drop_c, occ, power) = state
+             dm_c, drop_c, occ, power, fstate) = state
+            if has_faults:
+                (sp, fail_left, partner, size0, wasted, failcnt, rrp_s,
+                 rrp_n, rr_s, rr_n, rec_on, rec_pre, rec_t0, rec_s, rec_n,
+                 topo) = fstate
+                sc = f_scale[sp]                       # (l,) current segment
+                avail = sc > 0.0
+                sc_safe = jnp.where(avail, sc, 1.0)
+                tgt_cur = seg_tgt[sp]
             active = proc >= 0
             proc_safe = jnp.maximum(proc, 0)
             mask = proc[:, None] == cols[None, :]               # (ns, l)
@@ -124,27 +170,61 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
             cnt_safe = jnp.maximum(cntf, 1.0)
             if order_ps:
                 rem_col = jnp.where(mask, remaining[:, None], jnp.inf)
-                dtj = jnp.where(cnt > 0, rem_col.min(0) * cntf, jnp.inf)
-                pw = jnp.where(active,
-                               P[types, proc_safe] / cnt_safe[proc_safe],
-                               0.0).sum()
+                if has_faults:
+                    dtj = jnp.where((cnt > 0) & avail,
+                                    rem_col.min(0) * cntf / sc_safe, jnp.inf)
+                    pw = (jnp.where(active, P[types, proc_safe] * sc[proc_safe]
+                                    / cnt_safe[proc_safe], 0.0)).sum()
+                else:
+                    dtj = jnp.where(cnt > 0, rem_col.min(0) * cntf, jnp.inf)
+                    pw = jnp.where(active,
+                                   P[types, proc_safe] / cnt_safe[proc_safe],
+                                   0.0).sum()
             elif order_prio:
                 rp = jnp.maximum(run_pid, 0)
-                dtj = jnp.where(cnt > 0, remaining[rp], jnp.inf)
-                pw = jnp.where(cnt > 0, P[types[rp], cols], 0.0).sum()
+                if has_faults:
+                    dtj = jnp.where((cnt > 0) & avail, remaining[rp] / sc_safe,
+                                    jnp.inf)
+                    pw = jnp.where(cnt > 0, P[types[rp], cols] * sc, 0.0).sum()
+                else:
+                    dtj = jnp.where(cnt > 0, remaining[rp], jnp.inf)
+                    pw = jnp.where(cnt > 0, P[types[rp], cols], 0.0).sum()
             else:
                 stamp_col = jnp.where(mask, stamp[:, None], _BIG_STAMP)
                 head = jnp.argmin(stamp_col, axis=0)            # (l,)
-                dtj = jnp.where(cnt > 0, remaining[head], jnp.inf)
-                pw = jnp.where(cnt > 0, P[types[head], cols], 0.0).sum()
+                if has_faults:
+                    dtj = jnp.where((cnt > 0) & avail,
+                                    remaining[head] / sc_safe, jnp.inf)
+                    pw = jnp.where(cnt > 0, P[types[head], cols] * sc,
+                                   0.0).sum()
+                else:
+                    dtj = jnp.where(cnt > 0, remaining[head], jnp.inf)
+                    pw = jnp.where(cnt > 0, P[types[head], cols], 0.0).sum()
             j_star = jnp.argmin(dtj)
             dt_c = dtj[j_star]
             ta = jnp.where(a_ptr < T, arr_t[jnp.clip(a_ptr, 0, T - 1)],
                            jnp.inf)
-            do_arr = (a_ptr < T) & (ta - now <= dt_c)   # arrival first on tie
-            do_comp = (~do_arr) & jnp.isfinite(dt_c)
-            dt = jnp.where(do_arr, ta - now,
-                           jnp.where(do_comp, dt_c, 0.0))
+            if has_faults:
+                if n_faults > 0:
+                    tf = jnp.where(sp < n_faults,
+                                   f_times[jnp.clip(sp, 0, n_faults - 1)],
+                                   jnp.inf)
+                else:
+                    tf = jnp.float32(jnp.inf)
+                # fault first on exact ties; only faults inside the horizon
+                # fire (the host loop exits after the last arrival drains)
+                do_fault = (jnp.isfinite(tf) & (tf <= ta)
+                            & (tf - now <= dt_c) & (tf <= t_end))
+                do_arr = (~do_fault) & (a_ptr < T) & (ta - now <= dt_c)
+                do_comp = (~do_fault) & (~do_arr) & jnp.isfinite(dt_c)
+                dt = jnp.where(do_fault, tf - now,
+                               jnp.where(do_arr, ta - now,
+                                         jnp.where(do_comp, dt_c, 0.0)))
+            else:
+                do_arr = (a_ptr < T) & (ta - now <= dt_c)   # arrival first on tie
+                do_comp = (~do_arr) & jnp.isfinite(dt_c)
+                dt = jnp.where(do_arr, ta - now,
+                               jnp.where(do_comp, dt_c, 0.0))
             new_now = now + dt
             # time integrals over the overlap with the window [t_warm, t_end]
             ow = jnp.clip(jnp.minimum(new_now, t_end) - jnp.maximum(now, t_warm),
@@ -154,13 +234,19 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
             now = new_now
             # ---- deplete in-service tasks over dt ----
             if order_ps:
-                dep = jnp.where(active, dt / cnt_safe[proc_safe], 0.0)
+                if has_faults:
+                    dep = jnp.where(active, dt * sc[proc_safe]
+                                    / cnt_safe[proc_safe], 0.0)
+                else:
+                    dep = jnp.where(active, dt / cnt_safe[proc_safe], 0.0)
             elif order_prio:
                 is_run = active & (run_pid[proc_safe] == idx_s)
-                dep = jnp.where(is_run, dt, 0.0)
+                dep = (jnp.where(is_run, dt * sc[proc_safe], 0.0)
+                       if has_faults else jnp.where(is_run, dt, 0.0))
             else:
                 is_head = active & (idx_s == head[proc_safe])
-                dep = jnp.where(is_head, dt, 0.0)
+                dep = (jnp.where(is_head, dt * sc[proc_safe], 0.0)
+                       if has_faults else jnp.where(is_head, dt, 0.0))
             remaining = remaining - dep
             frac = jnp.where(need > 0, dep / need, 0.0)
             size_left = jnp.maximum(size_left - frac * size_left, 0.0)
@@ -175,7 +261,14 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
                 pid = head[j_star]
             t_done = types[pid]
             c_done = cls_arr[t_done]
-            wf = jnp.where(do_comp & (now > t_warm) & (now <= t_end),
+            if has_faults:
+                # transient failure: the attempt completes but fails, the
+                # task re-executes from its last checkpoint on the same pool
+                fail_now = do_comp & (fail_left[pid] > 0)
+                succ = do_comp & ~fail_now
+            else:
+                succ = do_comp
+            wf = jnp.where(succ & (now > t_warm) & (now <= t_end),
                            1.0, 0.0)
             resp = now - entry[pid]
             b = jnp.clip(jnp.floor(
@@ -188,7 +281,7 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
                                                * need[pid])
             dm_c = dm_c.at[c_done].add(
                 wf * jnp.where(resp <= deadlines[c_done], 1.0, 0.0))
-            comp_i = jnp.where(do_comp, 1, 0).astype(jnp.int32)
+            comp_i = jnp.where(succ, 1, 0).astype(jnp.int32)
             counts = counts.at[t_done, j_star].add(-comp_i)
             if order_prio:
                 # next head BEFORE freeing the slot: oldest waiting task of
@@ -199,15 +292,121 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
                 new_head = jnp.where(waiting.any(), nxt.astype(jnp.int32),
                                      -1)
                 run_pid = run_pid.at[j_star].set(
-                    jnp.where(do_comp, new_head, run_pid[j_star]))
-            proc = proc.at[pid].set(jnp.where(do_comp, -1, proc[pid]))
-            remaining = remaining.at[pid].set(
-                jnp.where(do_comp, jnp.inf, remaining[pid]))
-            need = need.at[pid].set(jnp.where(do_comp, 0.0, need[pid]))
-            size_left = size_left.at[pid].set(
-                jnp.where(do_comp, 0.0, size_left[pid]))
-            stamp = stamp.at[pid].set(
-                jnp.where(do_comp, _BIG_STAMP, stamp[pid]))
+                    jnp.where(succ, new_head, run_pid[j_star]))
+            proc = proc.at[pid].set(jnp.where(succ, -1, proc[pid]))
+            if has_faults:
+                inw_t = (now > t_warm) & (now <= t_end)
+                # failed attempt: the full service was done, then lost back
+                # to the last checkpoint (host restart(pid, need))
+                done_f = need[pid]
+                pres_f = jnp.where(jnp.isfinite(period),
+                                   jnp.floor(done_f / jnp.maximum(period,
+                                                                  1e-30))
+                                   * jnp.where(jnp.isfinite(period), period,
+                                               0.0), 0.0)
+                newrem_f = done_f - pres_f + overhead
+                wasted = wasted + jnp.where(fail_now & inw_t, done_f - pres_f,
+                                            0.0)
+                failcnt = failcnt + jnp.where(fail_now & inw_t, 1.0, 0.0)
+                fail_left = fail_left.at[pid].add(
+                    -jnp.where(fail_now, 1, 0).astype(jnp.int32))
+                remaining = remaining.at[pid].set(
+                    jnp.where(fail_now, newrem_f, remaining[pid]))
+                size_left = size_left.at[pid].set(jnp.where(
+                    fail_now,
+                    size0[pid] * jnp.clip(newrem_f
+                                          / jnp.maximum(done_f, 1e-30),
+                                          0.0, 1.0),
+                    size_left[pid]))
+                remaining = remaining.at[pid].set(
+                    jnp.where(succ, jnp.inf, remaining[pid]))
+                need = need.at[pid].set(jnp.where(succ, 0.0, need[pid]))
+                size_left = size_left.at[pid].set(
+                    jnp.where(succ, 0.0, size_left[pid]))
+                stamp = stamp.at[pid].set(
+                    jnp.where(succ, _BIG_STAMP, stamp[pid]))
+                # hedge partner: first-completion-wins, cancel the loser and
+                # charge its finished work as wasted
+                pt = partner[pid]
+                pt_s = jnp.maximum(pt, 0)
+                has_pt = succ & (pt >= 0)
+                jb = jnp.maximum(proc[pt_s], 0)
+                done_b = jnp.clip(need[pt_s] - remaining[pt_s], 0.0, None)
+                wasted = wasted + jnp.where(has_pt & inw_t, done_b, 0.0)
+                counts = counts.at[types[pt_s], jb].add(
+                    -jnp.where(has_pt, 1, 0).astype(jnp.int32))
+                if order_prio:
+                    was_head = has_pt & (run_pid[jb] == pt)
+                    waiting_b = (proc == jb) & (idx_s != pt_s)
+                    pkey_b = cls_arr[types] * stamp_cap + stamp
+                    nxt_b = jnp.argmin(jnp.where(waiting_b, pkey_b,
+                                                 _BIG_STAMP))
+                    new_head_b = jnp.where(waiting_b.any(),
+                                           nxt_b.astype(jnp.int32), -1)
+                    run_pid = run_pid.at[jb].set(
+                        jnp.where(was_head, new_head_b, run_pid[jb]))
+                proc = proc.at[pt_s].set(jnp.where(has_pt, -1, proc[pt_s]))
+                remaining = remaining.at[pt_s].set(
+                    jnp.where(has_pt, jnp.inf, remaining[pt_s]))
+                need = need.at[pt_s].set(jnp.where(has_pt, 0.0, need[pt_s]))
+                size_left = size_left.at[pt_s].set(
+                    jnp.where(has_pt, 0.0, size_left[pt_s]))
+                stamp = stamp.at[pt_s].set(
+                    jnp.where(has_pt, _BIG_STAMP, stamp[pt_s]))
+                partner = partner.at[pt_s].set(
+                    jnp.where(has_pt, -1, partner[pt_s]))
+                partner = partner.at[pid].set(
+                    jnp.where(succ, -1, partner[pid]))
+                # re-route latency flush + recovery-time hit on success
+                succ_w = succ & (now <= t_end)
+                flush = succ_w & (rrp_n > 0)
+                rr_s = rr_s + jnp.where(flush, now * rrp_n - rrp_s, 0.0)
+                rr_n = rr_n + jnp.where(flush, rrp_n, 0.0)
+                rrp_s = jnp.where(flush, 0.0, rrp_s)
+                rrp_n = jnp.where(flush, 0.0, rrp_n)
+                pop = counts.sum()
+                rec_hit = succ_w & rec_on & (pop <= rec_pre)
+                rec_s = rec_s + jnp.where(rec_hit, now - rec_t0, 0.0)
+                rec_n = rec_n + jnp.where(rec_hit, 1.0, 0.0)
+                rec_on = rec_on & ~rec_hit
+            else:
+                remaining = remaining.at[pid].set(
+                    jnp.where(do_comp, jnp.inf, remaining[pid]))
+                need = need.at[pid].set(jnp.where(do_comp, 0.0, need[pid]))
+                size_left = size_left.at[pid].set(
+                    jnp.where(do_comp, 0.0, size_left[pid]))
+                stamp = stamp.at[pid].set(
+                    jnp.where(do_comp, _BIG_STAMP, stamp[pid]))
+
+            # ---- fault-event branch (identity unless do_fault) ----
+            if has_faults:
+                sp_new = sp + jnp.where(do_fault, 1, 0).astype(sp.dtype)
+                sc_next = f_scale[sp_new]
+                crash_col = do_fault & (sc > 0.0) & (sc_next <= 0.0)  # (l,)
+                act2 = proc >= 0
+                hit = act2 & crash_col[jnp.maximum(proc, 0)]
+                done_t = jnp.clip(need - remaining, 0.0, None)
+                pres_t = jnp.where(jnp.isfinite(period),
+                                   jnp.floor(done_t / jnp.maximum(period,
+                                                                  1e-30))
+                                   * jnp.where(jnp.isfinite(period), period,
+                                               0.0), 0.0)
+                newrem_t = need - pres_t + overhead
+                wasted = wasted + jnp.where(
+                    inw_t, jnp.where(hit, done_t - pres_t, 0.0).sum(), 0.0)
+                remaining = jnp.where(hit, newrem_t, remaining)
+                size_left = jnp.where(
+                    hit, size0 * jnp.clip(newrem_t / jnp.maximum(need, 1e-30),
+                                          0.0, 1.0), size_left)
+                any_crash = do_fault & crash_col.any()
+                topo = topo + jnp.where(any_crash, 1, 0).astype(jnp.int32)
+                rrp_s = rrp_s + jnp.where(any_crash, now, 0.0)
+                rrp_n = rrp_n + jnp.where(any_crash, 1.0, 0.0)
+                start_rec = any_crash & ~rec_on
+                rec_pre = jnp.where(start_rec, counts.sum(), rec_pre)
+                rec_t0 = jnp.where(start_rec, now, rec_t0)
+                rec_on = rec_on | start_rec
+                sp = sp_new
 
             # ---- arrival branch (identity when do_comp / no-op; the two
             # branches are exclusive, so post-completion state == pre-state
@@ -218,12 +417,19 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
             key, sub = jax.random.split(key)
             mask2 = proc[:, None] == cols[None, :]
             backlog = jnp.where(mask2, size_left[:, None], 0.0).sum(0)
-            j_new = route_one(counts, backlog, t_new,
-                              jax.random.fold_in(sub, 1))
+            if has_faults:
+                j_new = route_one(counts, backlog, t_new,
+                                  jax.random.fold_in(sub, 1), avail, tgt_cur)
+                ok_route = avail.any()
+            else:
+                j_new = route_one(counts, backlog, t_new,
+                                  jax.random.fold_in(sub, 1))
+                ok_route = True
             ok_limit = counts.sum() < admit[c_new]
             ok_queue = counts.sum(0)[j_new] < qcap
-            admit_ok = do_arr & ok_limit & ok_queue
-            dropped = do_arr & ~(ok_limit & ok_queue) & (a_ptr >= warmup)
+            admit_ok = do_arr & ok_limit & ok_queue & ok_route
+            dropped = (do_arr & ~(ok_limit & ok_queue & ok_route)
+                       & (a_ptr >= warmup))
             drop_c = drop_c.at[c_new].add(jnp.where(dropped, 1.0, 0.0))
             slot = jnp.argmin(proc)            # lowest free (-1) slot
             s_new = sample_for(sub, t_new)
@@ -244,21 +450,87 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
                 run_pid = run_pid.at[j_new].set(
                     jnp.where(admit_ok & (run_pid[j_new] < 0), slot,
                               run_pid[j_new]))
+            if has_faults:
+                size0 = size0.at[slot].set(
+                    jnp.where(admit_ok, s_new, size0[slot]))
+                fail_left = fail_left.at[slot].set(
+                    jnp.where(admit_ok, fail_cnt[a_idx], fail_left[slot]))
+                partner = partner.at[slot].set(
+                    jnp.where(admit_ok, -1, partner[slot]))
+                # hedged backup: same size, different pool, admitted only if
+                # the shed cap and a queue slot still allow it
+                want_hedge = admit_ok & (hedge_c[c_new] > 0)
+                avail2 = avail & (cols != j_new)
+                j2 = route_one(counts, backlog, t_new,
+                               jax.random.fold_in(sub, 4), avail2, tgt_cur)
+                ok2_limit = counts.sum() < admit[c_new]
+                ok2_queue = counts.sum(0)[j2] < qcap
+                slot2 = jnp.argmin(proc)       # next free slot post-primary
+                hedge_ok = (want_hedge & avail2.any() & ok2_limit & ok2_queue
+                            & (proc[slot2] < 0))
+                hg_i = jnp.where(hedge_ok, 1, 0).astype(jnp.int32)
+                sn2 = s_new / mu[t_new, j2]
+                counts = counts.at[t_new, j2].add(hg_i)
+                proc = proc.at[slot2].set(
+                    jnp.where(hedge_ok, j2, proc[slot2]))
+                types = types.at[slot2].set(
+                    jnp.where(hedge_ok, t_new, types[slot2]))
+                remaining = remaining.at[slot2].set(
+                    jnp.where(hedge_ok, sn2, remaining[slot2]))
+                need = need.at[slot2].set(
+                    jnp.where(hedge_ok, sn2, need[slot2]))
+                size_left = size_left.at[slot2].set(
+                    jnp.where(hedge_ok, s_new, size_left[slot2]))
+                size0 = size0.at[slot2].set(
+                    jnp.where(hedge_ok, s_new, size0[slot2]))
+                entry = entry.at[slot2].set(
+                    jnp.where(hedge_ok, now, entry[slot2]))
+                stamp = stamp.at[slot2].set(
+                    jnp.where(hedge_ok, i, stamp[slot2]))
+                fail_left = fail_left.at[slot2].set(
+                    jnp.where(hedge_ok, fail_cnt[a_idx], fail_left[slot2]))
+                partner = partner.at[slot2].set(
+                    jnp.where(hedge_ok, slot, partner[slot2]))
+                partner = partner.at[slot].set(
+                    jnp.where(hedge_ok, slot2, partner[slot]))
+                if order_prio:
+                    run_pid = run_pid.at[j2].set(
+                        jnp.where(hedge_ok & (run_pid[j2] < 0), slot2,
+                                  run_pid[j2]))
             a_ptr = a_ptr + jnp.where(do_arr, 1, 0).astype(jnp.int32)
+            if has_faults:
+                fstate = (sp, fail_left, partner, size0, wasted, failcnt,
+                          rrp_s, rrp_n, rr_s, rr_n, rec_on, rec_pre, rec_t0,
+                          rec_s, rec_n, topo)
+            else:
+                fstate = ()
             return (key, now, a_ptr, proc, types, remaining, need,
                     size_left, entry, stamp, run_pid, counts, hist, resp_c,
-                    meas_c, energy_c, dm_c, drop_c, occ, power), None
+                    meas_c, energy_c, dm_c, drop_c, occ, power, fstate), None
 
+        n_steps = total_steps if has_faults else 2 * T
         state, _ = jax.lax.scan(step, state,
-                                jnp.arange(2 * T, dtype=jnp.int32))
+                                jnp.arange(n_steps, dtype=jnp.int32))
         (_, _, _, _, _, _, _, _, _, _, _, _, hist, resp_c, meas_c,
-         energy_c, dm_c, drop_c, occ, power) = state
+         energy_c, dm_c, drop_c, occ, power, fstate) = state
         elapsed = t_end - t_warm
+        if has_faults:
+            (_, _, _, _, wasted, failcnt, _, _, rr_s, rr_n, rec_on, _,
+             rec_t0, rec_s, rec_n, topo) = fstate
+            # recovery still open at the horizon: censor at t_end
+            rec_s = rec_s + jnp.where(rec_on,
+                                      jnp.clip(t_end - rec_t0, 0.0, None),
+                                      0.0)
+            rec_n = rec_n + jnp.where(rec_on, 1.0, 0.0)
+            return (hist, resp_c, meas_c, energy_c, dm_c, drop_c, occ,
+                    power, elapsed, wasted, failcnt, rr_s, rr_n, rec_s,
+                    rec_n, topo)
         return (hist, resp_c, meas_c, energy_c, dm_c, drop_c, occ, power,
                 elapsed)
 
     return jax.vmap(one)(mu, P, target, rank, arr_t, arr_ty, keys, modes,
-                         admit, deadlines)
+                         admit, deadlines, f_times, f_scale, seg_tgt,
+                         fail_cnt, hedge_c, period, overhead)
 
 
 def simulate_open_batch(mu, targets, arr_times, arr_types, seeds, *,
@@ -267,7 +539,7 @@ def simulate_open_batch(mu, targets, arr_times, arr_types, seeds, *,
                         power: PowerModel = PROPORTIONAL_POWER, modes=None,
                         class_of_type=None, class_distributions=None,
                         admit_limits=None, hist: LogHistogram | None = None,
-                        deadlines=None):
+                        deadlines=None, faults=None):
     """Simulate B open networks in one device call.
 
     mu: (k, l) shared or (B, k, l); targets: (B, k, l) reference placements
@@ -282,6 +554,14 @@ def simulate_open_batch(mu, targets, arr_times, arr_types, seeds, *,
     dropped (B,), class_dropped (B, C), class_hist (B, C, n_bins),
     class_quantiles (B, C, 3) — p50/p99/p999 recovered from the histogram
     with `hist.rel_error_bound` accuracy — and class_deadline_met (B, C).
+
+    `faults` (a `repro.faults.FaultBatch`, `build_fault_batch(...,
+    mode="open", n_arrivals=T, n_classes=C)`) turns on the fault core:
+    per-point crash/degrade schedules, host-realized transient-failure
+    counts, hedged dispatch and the checkpoint-restart model. The result
+    dict then gains goodput / wasted_work / failures / topology_events /
+    reroute_latency / recovery_time rows. With faults=None the compiled
+    program is the pre-fault one, byte for byte.
     """
     targets = np.asarray(targets)
     B, k, l = targets.shape
@@ -331,18 +611,51 @@ def simulate_open_batch(mu, targets, arr_times, arr_types, seeds, *,
         P = np.stack([power.power_matrix(m) for m in mus])
         ranks = np.stack([_mu_tiebreak_ranks(m) for m in mus])
     keys = np.stack([np.asarray(jax.random.PRNGKey(int(s))) for s in seeds])
-    (h, resp_c, meas_c, energy_c, dm_c, drop_c, occ, power_int,
-     elapsed) = _simulate_open_fleet(
+    has_faults = faults is not None
+    if has_faults:
+        if faults.fail_counts is None or faults.hedge is None:
+            raise ValueError("open-mode FaultBatch required "
+                             "(build_fault_batch(..., mode='open'))")
+        if faults.times.shape[0] != B or faults.scale.shape[2] != l:
+            raise ValueError("FaultBatch batch/pool dims do not match")
+        if faults.fail_counts.shape != (B, T):
+            raise ValueError(f"fail_counts must be (B, T); got "
+                             f"{faults.fail_counts.shape}")
+        if faults.hedge.shape[1] != C:
+            raise ValueError(f"hedge must be (B, {C})")
+        n_faults = faults.n_events
+        total_steps = 2 * T + int(faults.extra_steps)
+        f_times = jnp.asarray(faults.times, jnp.float32)
+        f_scale = jnp.asarray(faults.scale, jnp.float32)
+        seg_tgt = jnp.asarray(faults.seg_targets, jnp.int32)
+        fail_cnt = jnp.asarray(faults.fail_counts, jnp.int32)
+        hedge_c = jnp.asarray(faults.hedge, jnp.int32)
+        f_period = jnp.asarray(faults.ckpt_period, jnp.float32)
+        f_over = jnp.asarray(faults.restart_overhead, jnp.float32)
+    else:
+        n_faults, total_steps = 0, 2 * T
+        f_times = jnp.zeros((B, 0), jnp.float32)
+        f_scale = jnp.ones((B, 1, l), jnp.float32)
+        seg_tgt = jnp.zeros((B, 1, k, l), jnp.int32)
+        fail_cnt = jnp.zeros((B, T), jnp.int32)
+        hedge_c = jnp.zeros((B, C), jnp.int32)
+        f_period = jnp.full(B, np.inf, jnp.float32)
+        f_over = jnp.zeros(B, jnp.float32)
+    out_dev = _simulate_open_fleet(
         jnp.asarray(mus, jnp.float32), jnp.asarray(P, jnp.float32),
         jnp.asarray(targets, jnp.int32), jnp.asarray(ranks),
         jnp.asarray(arr_times, jnp.float32),
         jnp.asarray(arr_types, jnp.int32), jnp.asarray(keys),
         jnp.asarray(modes), jnp.asarray(admit, jnp.int32),
-        jnp.asarray(dl, jnp.float32), order=order, dist_specs=dist_specs,
+        jnp.asarray(dl, jnp.float32), f_times, f_scale, seg_tgt, fail_cnt,
+        hedge_c, f_period, f_over, order=order, dist_specs=dist_specs,
         n_arrivals=T, n_slots=ns, warmup=int(warmup_arrivals),
         cls_of=tuple(int(c) for c in cls), qcap=int(queue_capacity),
         hist_lo=float(hist.lo), hist_hi=float(hist.hi),
-        hist_bins=int(hist.n_bins))
+        hist_bins=int(hist.n_bins), has_faults=has_faults,
+        n_faults=n_faults, total_steps=total_steps)
+    (h, resp_c, meas_c, energy_c, dm_c, drop_c, occ, power_int,
+     elapsed) = out_dev[:9]
     h = np.asarray(h, np.float64)
     meas_c, resp_c, energy_c, dm_c, drop_c = (
         np.asarray(v, np.float64)
@@ -367,18 +680,32 @@ def simulate_open_batch(mu, targets, arr_times, arr_types, seeds, *,
     cls_occ = np.zeros((B, C, l))
     np.add.at(cls_occ, (slice(None), cls), occ)
     quants = np.stack([hist.quantiles(h[b], QUANTILES) for b in range(B)])
-    return {"throughput": x, "mean_response_time": et, "mean_energy": ee,
-            "edp": ee * et, "little_product": x * et,
-            "completed": measured.astype(np.int64), "elapsed": elapsed,
-            "state_occupancy": occ,
-            "mean_power": power_int / np.maximum(elapsed, 1e-12),
-            "class_throughput": cls_x, "class_response_time": cls_rt,
-            "class_energy": cls_ee, "class_occupancy": cls_occ,
-            "offered": np.full(B, T - warmup_arrivals, dtype=np.int64),
-            "dropped": drop_c.sum(1).astype(np.int64),
-            "class_dropped": drop_c.astype(np.int64),
-            "class_hist": h, "class_quantiles": quants,
-            "class_deadline_met": cls_dm}
+    res = {"throughput": x, "mean_response_time": et, "mean_energy": ee,
+           "edp": ee * et, "little_product": x * et,
+           "completed": measured.astype(np.int64), "elapsed": elapsed,
+           "state_occupancy": occ,
+           "mean_power": power_int / np.maximum(elapsed, 1e-12),
+           "class_throughput": cls_x, "class_response_time": cls_rt,
+           "class_energy": cls_ee, "class_occupancy": cls_occ,
+           "offered": np.full(B, T - warmup_arrivals, dtype=np.int64),
+           "dropped": drop_c.sum(1).astype(np.int64),
+           "class_dropped": drop_c.astype(np.int64),
+           "class_hist": h, "class_quantiles": quants,
+           "class_deadline_met": cls_dm}
+    if has_faults:
+        wasted, failcnt, rr_s, rr_n, rec_s, rec_n, topo = (
+            np.asarray(v, np.float64) for v in out_dev[9:])
+        el = np.maximum(elapsed, 1e-12)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            res["goodput"] = x
+            res["wasted_work"] = wasted / el
+            res["failures"] = failcnt.astype(np.int64)
+            res["topology_events"] = topo.astype(np.int64)
+            res["reroute_latency"] = np.where(rr_n > 0, rr_s
+                                              / np.maximum(rr_n, 1.0), np.nan)
+            res["recovery_time"] = np.where(rec_n > 0, rec_s
+                                            / np.maximum(rec_n, 1.0), np.nan)
+    return res
 
 
 def simulate_open_policy_jax(cfg, core):
@@ -392,6 +719,15 @@ def simulate_open_policy_jax(cfg, core):
     target = (np.asarray(core.policy.solve_target(mu, mix))
               if mode == MODE_DEFICIT else np.zeros(mu.shape, np.int64))
     times, tys = tr.spec.sample(cfg.seed, tr.n_arrivals)
+    faults = None
+    if cfg.faults is not None and not cfg.faults.is_null:
+        from repro.faults.device import build_fault_batch
+        cls = (np.zeros(mu.shape[0], np.int64) if cfg.class_of_type is None
+               else np.asarray(cfg.class_of_type, np.int64))
+        faults = build_fault_batch(
+            [cfg.faults], mu, target[None], seeds=[cfg.seed], mode="open",
+            policies=[core.policy], mixes=mix[None],
+            n_arrivals=tr.n_arrivals, n_classes=int(cls.max()) + 1)
     out = simulate_open_batch(
         mu, target[None], times[None], tys[None], [cfg.seed],
         distribution=cfg.distribution, queue_capacity=tr.queue_capacity,
@@ -401,7 +737,8 @@ def simulate_open_policy_jax(cfg, core):
         admit_limits=tr.resolved_admit_limits(mu.shape[1])[None],
         hist=tr.hist,
         deadlines=(tr.resolved_deadlines()[None]
-                   if tr.deadlines is not None else None))
+                   if tr.deadlines is not None else None),
+        faults=faults)
     return open_metrics_row(out, 0, track_deadlines=tr.deadlines is not None)
 
 
@@ -426,7 +763,14 @@ def open_metrics_row(out: dict, i: int, track_deadlines: bool = True):
         class_dropped=out["class_dropped"][i],
         class_quantiles=out["class_quantiles"][i],
         class_deadline_met=(out["class_deadline_met"][i]
-                            if track_deadlines else None))
+                            if track_deadlines else None),
+        **({"goodput": float(out["goodput"][i]),
+            "wasted_work": float(out["wasted_work"][i]),
+            "failures": int(out["failures"][i]),
+            "topology_events": int(out["topology_events"][i]),
+            "reroute_latency": float(out["reroute_latency"][i]),
+            "recovery_time": float(out["recovery_time"][i])}
+           if "goodput" in out else {}))
 
 
 __all__ = ["simulate_open_batch", "simulate_open_policy_jax",

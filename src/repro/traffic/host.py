@@ -233,8 +233,9 @@ def run_open(sim, core, return_samples: bool = False):
 
 def _open_metrics(sim, *, elapsed, offered, cls_meas, cls_resp, cls_energy,
                   cls_drop, cls_dm, occupancy, power_int, class_quantiles,
-                  track_deadlines):
-    """Assemble open-mode SimMetrics (shared by host-side consumers)."""
+                  track_deadlines, fault_extras=None):
+    """Assemble open-mode SimMetrics (shared by host-side consumers).
+    `fault_extras` merges the `repro.faults` goodput/wasted-work fields."""
     from repro.sim.simulator import SimMetrics
     C = sim.n_classes
     cm = np.asarray(cls_meas, dtype=np.float64)
@@ -263,7 +264,8 @@ def _open_metrics(sim, *, elapsed, offered, cls_meas, cls_resp, cls_energy,
         class_dropped=np.asarray(cls_drop, dtype=np.int64),
         class_quantiles=np.asarray(class_quantiles),
         class_deadline_met=(dm / np.maximum(cm, 1.0)
-                            if track_deadlines else None))
+                            if track_deadlines else None),
+        **(fault_extras or {}))
 
 
 __all__ = ["run_open"]

@@ -64,6 +64,12 @@ def run_with_recovery(step_fn: Callable, state, data_iter,
         except Exception as e:  # noqa: BLE001 — any fault triggers recovery
             restarts += 1
             log.warning("step %d failed (%s); restart %d", step, e, restarts)
+            # Drain any in-flight async checkpoint BEFORE touching ckpt_dir:
+            # restoring (or re-raising) while the writer thread is mid-file
+            # would race latest_step/restore against a half-written step.
+            if pending is not None:
+                pending.join()
+                pending = None
             if restarts > max_restarts:
                 raise
             latest = ckpt.latest_step(ckpt_dir)

@@ -244,3 +244,111 @@ def test_open_engine_conformance_per_class(policy, order):
     assert np.mean(et_rel) < O_ET_MEAN, (policy, order, et_rel)
     assert np.mean(drop_abs) < O_DROP_MEAN, (policy, order, drop_abs)
     assert np.mean(p99_rel) < 0.15, (policy, order, p99_rel)
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection conformance: both engines run the SAME realized fault
+# schedule (crash breakpoints, per-arrival transient-failure counts), so
+# goodput and lost-work must agree the way throughput does. Open mode shares
+# the arrival realization too; only task-size streams differ. Closed-mode
+# transient failures are drawn on device (own fold), so that cell is purely
+# statistical. Re-route/recovery latencies are NOT pinned: the host loop
+# censors them at the last arrival while the device scan drains in-flight
+# completions — a documented diagnostic divergence.
+# ---------------------------------------------------------------------------
+from repro.faults import FaultScenario, build_fault_batch, crash, make_storm  # noqa: E402
+from repro.sim.engine_jax import simulate_batch  # noqa: E402
+
+F_X_TOL, F_WASTE_TOL, F_DROP_ABS = 0.10, 0.35, 0.06
+
+
+@pytest.mark.parametrize("policy", ["grin-p", "lb"])
+def test_open_fault_conformance_goodput_and_lost_work(policy):
+    pol = (GrInPriorityPolicy((2.0, 1.0)) if policy == "grin-p" else
+           get_policy(policy))
+    dist = make_distribution("exponential")
+    mode = MODE_DEFICIT if pol.needs_target else _BASELINE_MODES[pol.key]
+    rows = []
+    for mi in range(len(OMUS)):
+        mu = OMUS[mi]
+        spec = _open_specs(mu)[0]
+        mix = derive_target_mix(spec, mu.shape[1], O_QCAP)
+        tgt = (np.asarray(pol.solve_target(mu, mix)) if pol.needs_target
+               else np.zeros(mu.shape, np.int64))
+        for s in OSEEDS:
+            times, tys = spec.sample(s, O_T)
+            tw, te = float(times[O_WARM - 1]), float(times[-1])
+            sc = FaultScenario(
+                events=make_storm(mu.shape[1], n_bursts=2, group_size=1,
+                                  window=(tw + 0.15 * (te - tw),
+                                          tw + 0.6 * (te - tw)),
+                                  downtime=0.08 * (te - tw), seed=5),
+                fail_prob=0.02, ckpt_period=0.05, hedge_classes=(0,),
+                refresh_targets=pol.needs_target)
+            cfg = open_sim_config(mu, spec, n_arrivals=O_T,
+                                  warmup_arrivals=O_WARM,
+                                  queue_capacity=O_QCAP, class_of_type=O_CLS,
+                                  target_mix=mix, distribution=dist,
+                                  order="PS", seed=s, faults=sc)
+            host = ClosedNetworkSimulator(cfg).run(pol)
+            fb = build_fault_batch([sc], mu[None], tgt[None], seeds=[s],
+                                   mode="open", policies=pol, mixes=mix,
+                                   n_arrivals=O_T, n_classes=2)
+            dev = simulate_open_batch(
+                mu[None], tgt[None], times[None], tys[None], [s],
+                distribution=dist, queue_capacity=O_QCAP, order="PS",
+                warmup_arrivals=O_WARM, class_of_type=O_CLS,
+                modes=np.full(1, mode, np.int32), faults=fb)
+            assert host.topology_events == int(dev["topology_events"][0])
+            assert host.failures > 0 and int(dev["failures"][0]) > 0
+            g_rel = abs(float(dev["goodput"][0]) - host.goodput) / host.goodput
+            w_rel = (abs(float(dev["wasted_work"][0]) - host.wasted_work)
+                     / max(host.wasted_work, 1e-9))
+            d_abs = abs(host.dropped - float(dev["dropped"][0])) / (O_T - O_WARM)
+            assert host.wasted_work > 0.0, (policy, mi, s)
+            assert g_rel < F_X_TOL, (policy, mi, s, host.goodput,
+                                     float(dev["goodput"][0]))
+            assert d_abs < F_DROP_ABS, (policy, mi, s, host.dropped,
+                                        int(dev["dropped"][0]))
+            rows.append((g_rel, w_rel, d_abs))
+    g, w, d = np.asarray(rows).T
+    assert w.max() < F_WASTE_TOL, (policy, rows)
+    assert g.mean() < 0.04 and w.mean() < 0.20, (policy, rows)
+
+
+@pytest.mark.parametrize("policy", ["grin", "lb"])
+def test_closed_fault_conformance_goodput_and_lost_work(policy):
+    pol = get_policy(policy)
+    dist = make_distribution("exponential")
+    mode = MODE_DEFICIT if pol.needs_target else _BASELINE_MODES[pol.key]
+    mu, mix = MUS[0], MIXES[0]
+    sc = FaultScenario(events=crash(1, 6.0, 12.0), fail_prob=0.05,
+                       ckpt_period=0.05, refresh_targets=pol.needs_target)
+    tgt = (np.asarray(pol.solve_target(mu, mix)) if pol.needs_target
+           else np.zeros(mu.shape, np.int64))
+    g_rel, w_rel = [], []
+    for s in SEEDS:
+        cfg = SimConfig(mu=mu, n_programs_per_type=np.asarray(mix),
+                        distribution=dist, order="PS",
+                        n_completions=N_COMPLETIONS,
+                        warmup_completions=WARMUP, seed=s, faults=sc)
+        host = ClosedNetworkSimulator(cfg).run(pol)
+        fb = build_fault_batch([sc], mu[None], tgt[None], seeds=[s],
+                               mode="closed", policies=pol, mixes=mix,
+                               n_completions=N_COMPLETIONS)
+        types0 = np.repeat(np.arange(3), mix).astype(np.int32)
+        dev = simulate_batch(mu[None], tgt[None], types0[None], [s],
+                             distribution=dist, order="PS",
+                             n_completions=N_COMPLETIONS,
+                             warmup_completions=WARMUP,
+                             modes=np.full(1, mode, np.int32), faults=fb)
+        assert host.topology_events == int(dev["topology_events"][0]) == 1
+        assert host.failures > 0 and int(dev["failures"][0]) > 0
+        assert host.wasted_work > 0.0 and float(dev["wasted_work"][0]) > 0.0
+        g_rel.append(abs(float(dev["goodput"][0]) - host.goodput)
+                     / host.goodput)
+        w_rel.append(abs(float(dev["wasted_work"][0]) - host.wasted_work)
+                     / host.wasted_work)
+    # device redraws transient failures on its own stream: statistical parity
+    assert max(g_rel) < PT_TOL and np.mean(g_rel) < 0.05, (policy, g_rel)
+    assert max(w_rel) < 0.8 and np.mean(w_rel) < 0.5, (policy, w_rel)

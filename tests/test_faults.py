@@ -1,0 +1,344 @@
+"""Fault injection and resilience (`repro.faults`).
+
+RNG stream isolation contract: host fault draws live on their own seeded
+substreams (`default_rng([seed, 2])` transient failures, `[seed, 3]` storm
+generation) and device fault draws on their own `fold_in` lanes (3 failure,
+4 hedge routing) — disjoint from the pre-existing engine streams (closed
+host `default_rng(seed)`, open arrivals `[seed, 0]`, sizes `[seed, 1]`,
+device route/mix folds 1/2). Enabling the fault machinery with a scenario
+that never fires therefore leaves every existing trajectory bit-identical;
+the tests below pin that, the deterministic fault realizations, the restart
+accounting semantics, and the topology-refresh / unroute satellites.
+"""
+import numpy as np
+import pytest
+
+from repro.faults import (FaultScenario, PoolEvent, build_fault_batch,
+                          crash, degrade, make_storm, segment_targets)
+from repro.faults.scenario import (DEVICE_FAIL_FOLD, DEVICE_HEDGE_FOLD,
+                                   HOST_FAIL_STREAM, HOST_STORM_STREAM)
+from repro.sched import get_policy
+from repro.sched.api import FixedTargetPolicy, SchedulerCore
+from repro.sim import (ClosedNetworkSimulator, SimConfig, make_distribution,
+                       simulate_batch)
+from repro.sim.engine_jax import MODE_DEFICIT, MODE_LB
+from repro.traffic import PoissonArrivals, TrafficSpec
+from repro.traffic.config import open_sim_config
+from repro.traffic.engine import simulate_open_batch
+
+MU = np.random.default_rng(31).uniform(1, 30, size=(3, 3))
+MIX = np.array([6, 6, 6])
+DIST = make_distribution("exponential")
+NEVER = FaultScenario(events=crash(0, 1e9, 2e9))  # non-null, never fires
+
+
+def _closed_cfg(**kw):
+    kw.setdefault("n_completions", 1500)
+    kw.setdefault("warmup_completions", 300)
+    return SimConfig(mu=MU, n_programs_per_type=MIX, distribution=DIST,
+                     order=kw.pop("order", "PS"), seed=kw.pop("seed", 7),
+                     **kw)
+
+
+def _open_cfg(**kw):
+    spec = TrafficSpec((PoissonArrivals(kw.pop("rate", 30.0)),),
+                       np.ones((1, 3)) / 3)
+    return open_sim_config(MU, spec, n_arrivals=kw.pop("n_arrivals", 2500),
+                           warmup_arrivals=kw.pop("warmup_arrivals", 400),
+                           queue_capacity=6, distribution=DIST,
+                           seed=kw.pop("seed", 7), **kw)
+
+
+# ----------------------------- realization ---------------------------------
+
+def test_storm_realization_golden():
+    """Same seed => identical crash schedule, shared verbatim by engines."""
+    storm = make_storm(3, n_bursts=2, group_size=2, window=(20.0, 50.0),
+                       downtime=6.0, seed=3)
+    assert [(e.time, e.pool, e.scale) for e in storm] == [
+        (23.08398844894454, 1, 0.0), (29.08398844894454, 1, 1.0),
+        (23.08398844894454, 2, 0.0), (29.08398844894454, 2, 1.0),
+        (29.598398592542534, 0, 0.0), (35.59839859254254, 0, 1.0),
+        (29.598398592542534, 2, 0.0), (35.59839859254254, 2, 1.0)]
+    real = FaultScenario(events=storm).realize(3)
+    np.testing.assert_allclose(real.times, [23.08398844894454,
+                                            29.08398844894454,
+                                            29.598398592542534,
+                                            35.59839859254254], rtol=0)
+    np.testing.assert_array_equal(real.scale, [[1, 1, 1], [1, 0, 0],
+                                               [1, 1, 1], [0, 1, 0],
+                                               [1, 1, 1]])
+    assert np.all(np.diff(real.times) > 0)
+    pad = real.padded(6)
+    assert pad.times.shape == (6,) and np.isinf(pad.times[4:]).all()
+    np.testing.assert_array_equal(pad.scale[-1], real.scale[-1])
+
+
+def test_fail_counts_golden_and_seed_streams():
+    sc = FaultScenario(fail_prob=0.3)
+    assert sc.fail_counts(7, 20).tolist() == [1, 3, 1, 0, 0, 0, 0, 0, 0, 3,
+                                              4, 0, 0, 0, 1, 1, 1, 0, 0, 0]
+    assert sc.fail_counts(8, 20).tolist() == [0, 1, 0, 1, 0, 0, 1, 0, 0, 0,
+                                              0, 2, 0, 1, 0, 0, 1, 0, 0, 0]
+    np.testing.assert_array_equal(sc.fail_counts(7, 20), sc.fail_counts(7, 20))
+    assert sc.fail_counts(7, 500).max() <= sc.fail_cap
+    assert FaultScenario(fail_prob=0.0).fail_counts(7, 20).sum() == 0
+
+
+def test_rng_stream_isolation_constants():
+    # host: closed engine rng(seed), open arrivals [seed,0], sizes [seed,1]
+    assert {HOST_FAIL_STREAM, HOST_STORM_STREAM} == {2, 3}
+    # device: fold_in 1 route, 2 mix — fault lanes must not collide
+    assert {DEVICE_FAIL_FOLD, DEVICE_HEDGE_FOLD} == {3, 4}
+
+
+def test_scenario_validation():
+    with pytest.raises(ValueError):
+        FaultScenario(fail_prob=1.0)
+    with pytest.raises(ValueError):
+        FaultScenario(ckpt_period=0.0)
+    with pytest.raises(ValueError):
+        crash(0, 5.0, 4.0)
+    with pytest.raises(ValueError):
+        degrade(0, 5.0, 0.0)
+    with pytest.raises(ValueError):
+        make_storm(1)
+    assert FaultScenario().is_null
+    assert not NEVER.is_null
+    # a storm that would down the whole fleet at once is rejected at
+    # realize time when a survivor is required
+    whole = crash(0, 5.0, 9.0) + crash(1, 5.0, 9.0) + crash(2, 5.0, 9.0)
+    with pytest.raises(ValueError):
+        FaultScenario(events=whole).realize(3, require_alive=True)
+
+
+# --------------------------- zero-fault identity ---------------------------
+
+def test_null_scenario_closed_host_bit_identical():
+    base = ClosedNetworkSimulator(_closed_cfg()).run("grin")
+    null = ClosedNetworkSimulator(_closed_cfg(faults=FaultScenario())).run("grin")
+    assert null.throughput == base.throughput
+    assert null.mean_response_time == base.mean_response_time
+    assert null.goodput is None  # fault-free path: no resilience extras
+
+
+@pytest.mark.parametrize("policy", ["grin", "lb"])
+def test_never_firing_closed_host_bit_identical(policy):
+    base = ClosedNetworkSimulator(_closed_cfg()).run(policy)
+    far = ClosedNetworkSimulator(_closed_cfg(faults=NEVER)).run(policy)
+    # same event trajectory through the fault loop: x1.0 scaling is exact
+    rtol = 0.0 if policy == "lb" else 1e-9
+    np.testing.assert_allclose(far.throughput, base.throughput, rtol=rtol)
+    np.testing.assert_allclose(far.mean_response_time,
+                               base.mean_response_time, rtol=rtol)
+    assert far.goodput is not None and far.failures == 0
+    assert far.topology_events == 0 and far.wasted_work == 0.0
+
+
+@pytest.mark.parametrize("policy", ["grin", "lb"])
+def test_never_firing_open_host_bit_identical(policy):
+    base = ClosedNetworkSimulator(_open_cfg()).run(policy)
+    far = ClosedNetworkSimulator(_open_cfg(faults=NEVER)).run(policy)
+    assert far.throughput == base.throughput
+    assert far.dropped == base.dropped
+    assert far.mean_response_time == base.mean_response_time
+    assert far.failures == 0 and far.wasted_work == 0.0
+
+
+def test_never_firing_closed_device_bit_identical():
+    pol = get_policy("grin")
+    tgt = np.asarray(pol.solve_target(MU, MIX))[None]
+    types0 = np.repeat(np.arange(3), 6).astype(np.int32)[None]
+    kw = dict(distribution=DIST, order="PS", n_completions=1500,
+              warmup_completions=300)
+    base = simulate_batch(MU[None], tgt, types0, [7], **kw)
+    fb = build_fault_batch([NEVER], MU[None], tgt, seeds=[7], mode="closed",
+                          n_completions=1500)
+    far = simulate_batch(MU[None], tgt, types0, [7], faults=fb, **kw)
+    assert float(far["throughput"][0]) == float(base["throughput"][0])
+    # response accumulates through the (reordered) fault-mode step: f32 ulp
+    np.testing.assert_allclose(far["mean_response_time"],
+                               base["mean_response_time"], rtol=2e-7)
+    assert int(far["failures"][0]) == 0 and int(far["topology_events"][0]) == 0
+
+
+def test_never_firing_open_device_bit_identical():
+    pol = get_policy("grin")
+    tgt = np.asarray(pol.solve_target(MU, MIX))[None]
+    spec = TrafficSpec((PoissonArrivals(30.0),), np.ones((1, 3)) / 3)
+    times, tys = spec.sample(7, 2500)
+    kw = dict(distribution=DIST, queue_capacity=6, order="PS",
+              warmup_arrivals=400)
+    base = simulate_open_batch(MU[None], tgt, times[None], tys[None], [7], **kw)
+    fb = build_fault_batch([NEVER], MU[None], tgt, seeds=[7], mode="open",
+                          n_arrivals=2500)
+    far = simulate_open_batch(MU[None], tgt, times[None], tys[None], [7],
+                              faults=fb, **kw)
+    assert float(far["throughput"][0]) == float(base["throughput"][0])
+    assert int(far["dropped"][0]) == int(base["dropped"][0])
+    assert int(far["failures"][0]) == 0
+
+
+# ----------------------------- fault semantics -----------------------------
+
+def test_closed_crash_accounting():
+    sc = FaultScenario(events=crash(1, 6.0, 10.0))  # inside the window
+    m = ClosedNetworkSimulator(_closed_cfg(faults=sc)).run("grin")
+    base = ClosedNetworkSimulator(_closed_cfg()).run("grin")
+    assert m.topology_events == 1
+    assert m.failures == 0
+    assert m.wasted_work > 0.0          # in-flight work on pool 1 was lost
+    assert np.isfinite(m.reroute_latency)
+    assert np.isnan(m.recovery_time)    # closed population is constant
+    assert m.goodput == m.throughput    # every completion counts once
+    assert m.throughput < base.throughput
+
+
+def test_transient_failures_slow_the_closed_system():
+    sc = FaultScenario(fail_prob=0.15)
+    m = ClosedNetworkSimulator(_closed_cfg(faults=sc)).run("grin")
+    base = ClosedNetworkSimulator(_closed_cfg()).run("grin")
+    assert m.failures > 0
+    assert m.wasted_work > 0.0
+    assert m.throughput < base.throughput
+    assert m.completed == base.completed  # re-execution, not loss
+
+
+def test_checkpoint_restart_reduces_wasted_work():
+    kw = dict(events=crash(1, 6.0, 10.0) + crash(0, 12.0, 15.0))
+    full = ClosedNetworkSimulator(
+        _closed_cfg(faults=FaultScenario(**kw))).run("grin")
+    ck = ClosedNetworkSimulator(
+        _closed_cfg(faults=FaultScenario(ckpt_period=0.02, **kw))).run("grin")
+    assert 0.0 < ck.wasted_work < full.wasted_work
+    # overhead makes restarts dearer but still beats full re-execution
+    ov = ClosedNetworkSimulator(_closed_cfg(faults=FaultScenario(
+        ckpt_period=0.02, restart_overhead=0.01, **kw))).run("grin")
+    assert ov.wasted_work <= full.wasted_work
+
+
+def test_degraded_pool_is_a_straggler_not_a_crash():
+    sc = FaultScenario(events=degrade(1, 5.0, 0.05, 12.0))
+    m = ClosedNetworkSimulator(_closed_cfg(faults=sc)).run("grin")
+    base = ClosedNetworkSimulator(_closed_cfg()).run("grin")
+    # no crash: nothing is lost or re-routed, it just runs slower
+    assert m.topology_events == 0
+    assert m.wasted_work == 0.0
+    assert m.throughput < base.throughput
+
+
+def test_hedged_dispatch_cuts_response_time_under_straggle():
+    # asymmetric pools: with identical pools every task's replica runs in
+    # lockstep with its primary and hedging is (correctly) a no-op
+    mu = np.array([[8.0, 4.0]])
+    spec = TrafficSpec((PoissonArrivals(5.0),), np.ones((1, 1)))
+    kw = dict(n_arrivals=1200, warmup_arrivals=100, queue_capacity=8,
+              distribution=DIST, seed=3)
+    ev = degrade(0, 10.0, 0.02, 60.0)
+    plain = ClosedNetworkSimulator(open_sim_config(
+        mu, spec, faults=FaultScenario(events=ev), **kw)).run("grin")
+    hedged = ClosedNetworkSimulator(open_sim_config(
+        mu, spec, faults=FaultScenario(events=ev, hedge_classes=(0,)),
+        **kw)).run("grin")
+    # first-completion-wins: the healthy pool's backup rescues every task
+    # stranded behind the straggler
+    assert hedged.mean_response_time < 0.7 * plain.mean_response_time
+    assert hedged.wasted_work > 0.0     # cancelled losers are wasted work
+    assert hedged.goodput > plain.goodput
+    assert hedged.dropped < plain.dropped
+
+
+def test_hedge_requires_open_mode():
+    with pytest.raises(ValueError):
+        ClosedNetworkSimulator(_closed_cfg(
+            faults=FaultScenario(hedge_classes=(0,))))
+    with pytest.raises(ValueError):
+        build_fault_batch([FaultScenario(hedge_classes=(0,))], MU[None],
+                          np.zeros((1, 3, 3), np.int64), seeds=[0],
+                          mode="closed", n_completions=100)
+
+
+# --------------------------- target refresh fabric -------------------------
+
+def test_segment_targets_refresh_vacates_dead_pool():
+    pol = get_policy("grin")
+    real = FaultScenario(events=crash(1, 5.0, 9.0)).realize(3)
+    base = np.asarray(pol.solve_target(MU, MIX))
+    seg = segment_targets(pol, MU, MIX, real, refresh=True)
+    assert seg.shape == (3, 3, 3)
+    np.testing.assert_array_equal(seg[0], base)   # healthy: exact base
+    np.testing.assert_array_equal(seg[2], base)
+    assert seg[1][:, 1].sum() == 0                # down segment: vacated
+    assert seg[1].sum() > 0                       # survivors keep the load
+    static = segment_targets(pol, MU, MIX, real, refresh=False)
+    np.testing.assert_array_equal(static[1], base)
+
+
+def test_build_fault_batch_validates():
+    with pytest.raises(ValueError):
+        build_fault_batch([NEVER], MU[None], np.zeros((1, 3, 3), np.int64),
+                          seeds=[0], mode="bogus")
+    fb = build_fault_batch([NEVER, FaultScenario(fail_prob=0.1)],
+                          MU, np.zeros((3, 3), np.int64), seeds=[0, 1],
+                          mode="open", n_arrivals=50)
+    assert fb.n_points == 2 and fb.times.shape == (2, 2)
+    assert fb.fail_counts.shape == (2, 50)
+    assert fb.fail_counts[0].sum() == 0 and fb.fail_counts[1].sum() > 0
+
+
+# ------------------- satellite: topology refresh + unroute -----------------
+
+def test_fixed_target_goes_stale_on_topology_and_raises():
+    pol = FixedTargetPolicy(get_policy("grin").solve_target(MU, MIX))
+    core = SchedulerCore(pol, MU)
+    core.notify_type_counts(MIX)
+    assert 0 <= core.route(0) < 3
+    core.pool_lost(1)
+    with pytest.raises(ValueError, match="re-pinned"):
+        core.route(0)
+
+
+def test_refresh_on_topology_repins_fixed_target():
+    base = np.asarray(get_policy("grin").solve_target(MU, MIX))
+    core = SchedulerCore(FixedTargetPolicy(base.copy()), MU,
+                         refresh_on_topology=True)
+    core.notify_type_counts(MIX)
+    core.pool_lost(1)
+    j = core.route(0)
+    assert 0 <= j < 2
+    # the lost column re-homed per type onto the fastest survivor: the
+    # pinned population is conserved row by row
+    repinned = np.asarray(core.policy._fixed)
+    assert repinned.shape == (3, 2)
+    np.testing.assert_array_equal(repinned.sum(axis=1), base.sum(axis=1))
+    core.pool_added(np.array([5.0, 5.0, 5.0]))
+    assert core.policy._fixed.shape == (3, 3)
+    assert core.policy._fixed[:, -1].sum() == 0   # new pool starts empty
+    assert 0 <= core.route(1) < 3
+
+
+def test_repin_default_is_noop_for_solver_policies():
+    core = SchedulerCore("grin", MU, refresh_on_topology=True)
+    core.notify_type_counts(MIX)
+    core.route(0)
+    core.pool_lost(2)
+    assert 0 <= core.route(0) < 2     # lazy re-solve, no repin needed
+
+
+def test_unroute_guards_against_topology_corruption():
+    core = SchedulerCore("grin", MU)
+    core.notify_type_counts(MIX)
+    j = core.route(0)
+    counts = core.counts.copy()
+    with pytest.raises(IndexError, match="pool_lost"):
+        core.unroute(0, 5)
+    with pytest.raises(ValueError, match="negative"):
+        core.unroute(1, (j + 1) % 3)  # no route of type 1 on the books
+    np.testing.assert_array_equal(core.counts, counts)  # state untouched
+    core.unroute(0, j)                # the true inverse still works
+    assert core.counts.sum() == 0 and min(core.backlog_work) >= 0.0
+    # after a pool_lost, the stale index for the last pool is out of range
+    j = core.route(0)
+    core.pool_lost(0)
+    with pytest.raises((IndexError, ValueError)):
+        core.unroute(0, 2)

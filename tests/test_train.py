@@ -113,6 +113,76 @@ def test_run_with_recovery_heals_injected_failure():
     assert restarts == 1
 
 
+def test_recovery_joins_inflight_async_checkpoint(monkeypatch):
+    """A crash while an async checkpoint is still writing must DRAIN the
+    writer before restore: latest_step/restore racing a half-written step
+    file is silent corruption. The slow save below keeps the writer in
+    flight when the injected failure lands; latest_step asserts no writer
+    is mid-file (fails without the join on the exception path)."""
+    import threading
+    import time
+
+    from repro.train import fault_tolerance as ft
+
+    _, state, step, dc = _setup()
+    calls = {"n": 0}
+    inflight = {"n": 0}
+    real_save, real_latest = ft.ckpt.save, ft.ckpt.latest_step
+
+    def slow_save(d, step_, tree, keep=3, async_=False):
+        if not async_:
+            return real_save(d, step_, tree, keep=keep)
+        inflight["n"] += 1
+
+        def work():
+            time.sleep(0.25)
+            real_save(d, step_, tree, keep=keep)
+            inflight["n"] -= 1
+
+        t = threading.Thread(target=work)
+        t.start()
+        return t
+
+    def checked_latest(d):
+        assert inflight["n"] == 0, \
+            "restore raced an in-flight async checkpoint write"
+        return real_latest(d)
+
+    monkeypatch.setattr(ft.ckpt, "save", slow_save)
+    monkeypatch.setattr(ft.ckpt, "latest_step", checked_latest)
+
+    def flaky_step(s, batch):
+        calls["n"] += 1
+        if calls["n"] == 3:  # right after the step-2 checkpoint launches
+            raise RuntimeError("injected node failure")
+        return step(s, batch)
+
+    class Iter:
+        def __init__(self):
+            self.i = 0
+
+        def __iter__(self):
+            return self
+
+        def __next__(self):
+            b = {k: jnp.asarray(v)
+                 for k, v in batch_for_step(dc, self.i).items()}
+            i = self.i
+            self.i += 1
+            return i, b
+
+        def seek(self, step_):
+            self.i = step_
+
+    with tempfile.TemporaryDirectory() as d:
+        final, steps, restarts = run_with_recovery(
+            flaky_step, state, Iter(), ckpt_dir=d, ckpt_every=2,
+            max_steps=4, async_ckpt=True)
+        assert inflight["n"] == 0  # final pending drained before return
+    assert steps == 4
+    assert restarts == 1
+
+
 def test_int8_compression_error_feedback():
     x = jnp.array([0.1, -0.5, 3.0, 1e-4])
     q, s = quantize_int8(x)
