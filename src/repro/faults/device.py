@@ -39,6 +39,9 @@ class FaultBatch:
     hedge: np.ndarray | None = None        # (B, C) open: hedged classes
     fail_prob: np.ndarray | None = None    # (B,) closed: per-attempt prob
     fail_cap: np.ndarray | None = None     # (B,) closed: per-task failure cap
+    ckpt_age: np.ndarray | None = None     # (B,) age-threshold policy, 0 = off
+    hedge_q: np.ndarray | None = None      # (B,) open: straggler quantile, 0 = off
+    hedge_min: np.ndarray | None = None    # (B,) open: min obs before triggering
 
     @property
     def n_points(self) -> int:
@@ -114,6 +117,7 @@ def build_fault_batch(scenarios, mu, targets, *, seeds, mode,
 
     period = np.array([np.inf if sc.ckpt_period is None else float(sc.ckpt_period)
                        for sc in scenarios])
+    age = np.array([float(sc.ckpt_age) for sc in scenarios])
     overhead = np.array([float(sc.restart_overhead) for sc in scenarios])
 
     if mode == "open":
@@ -126,16 +130,27 @@ def build_fault_batch(scenarios, mu, targets, *, seeds, mode,
                 if not 0 <= int(c) < n_classes:
                     raise ValueError(f"hedge class {c} out of range")
                 hedge[i, int(c)] = 1
+        hq = np.array([float(sc.hedge_quantile) for sc in scenarios])
+        hmin = np.array([int(sc.hedge_min_obs) for sc in scenarios], np.int32)
         extra = s_max + int(fail.sum(axis=1).max(initial=0)) + 4
+        if (hq > 0.0).any():
+            # every speculative backup consumes an extra scan step; bound
+            # the trigger count by the tail mass at the loosest quantile
+            q_min = float(hq[hq > 0.0].min())
+            extra += int(np.ceil(3.0 * (1.0 - q_min) * t)) + 64
         return FaultBatch(times, scale, seg, period, overhead, extra,
-                          fail_counts=fail, hedge=hedge)
+                          fail_counts=fail, hedge=hedge, ckpt_age=age,
+                          hedge_q=hq, hedge_min=hmin)
 
     for sc in scenarios:
         if sc.hedge_classes:
             raise ValueError("hedge_classes require open/traffic mode")
+        if sc.hedge_quantile > 0.0:
+            raise ValueError("hedge_quantile (speculative straggler hedging) "
+                             "requires open/traffic mode")
     fp = np.array([float(sc.fail_prob) for sc in scenarios])
     fc = np.array([int(sc.fail_cap) for sc in scenarios], np.int32)
     extra = s_max + max(_closed_fail_budget(int(n_completions), float(p), int(c))
                         for p, c in zip(fp, fc))
     return FaultBatch(times, scale, seg, period, overhead, extra,
-                      fail_prob=fp, fail_cap=fc)
+                      fail_prob=fp, fail_cap=fc, ckpt_age=age)

@@ -47,11 +47,15 @@ from repro.traffic.quantiles import QUANTILES, exact_quantiles
 _INF = float("inf")
 
 
-def _preserved(done: float, period: float) -> float:
-    """Checkpoint-restart: work surviving a fault after `done` alone-secs."""
-    if period == _INF or done <= 0.0:
+def _preserved(done: float, period: float, age: float = 0.0) -> float:
+    """Checkpoint-restart: work surviving a fault after `done` alone-secs.
+
+    ``age`` is the age-threshold policy (`FaultScenario.ckpt_age`): no
+    checkpoint exists before `age`, then one every `period` from there —
+    ``age = 0`` is the uniform-period grid, bit-identical to PR 7."""
+    if period == _INF or done <= 0.0 or done < age:
         return 0.0
-    return float(np.floor(done / period)) * period
+    return age + float(np.floor((done - age) / period)) * period
 
 
 # ---------------------------------------------------------------------------
@@ -97,8 +101,19 @@ def run_open_faults(sim, core, return_samples: bool = False):
     scale_rows = real.scale                       # (S + 1, l)
     fail_counts = fs.fail_counts(cfg.seed, T)
     period = _INF if fs.ckpt_period is None else float(fs.ckpt_period)
+    ckpt_age = float(fs.ckpt_age)
     overhead = float(fs.restart_overhead)
     hedge_cls = [c in set(fs.hedge_classes) for c in range(C)]
+    # straggler-triggered speculative hedging: a running per-type response
+    # histogram (the device engine's accumulator, same geometry) feeds a
+    # quantile threshold; unpaired in-flight tasks older than it get a
+    # late-binding backup
+    hq = float(fs.hedge_quantile)
+    hmin = int(fs.hedge_min_obs)
+    hist = tr.hist
+    shist = np.zeros((k, hist.n_bins)) if hq > 0.0 else None
+    th = np.full(k, _INF)
+    n_spec = 0
     seg_tgts = (segment_targets(core.policy, mu, mix, real,
                                 refresh=fs.refresh_targets)
                 if needs_target else None)
@@ -238,7 +253,7 @@ def run_open_faults(sim, core, return_samples: bool = False):
 
     def restart(pid: int, done: float) -> float:
         """Reset a task to its last checkpoint; returns the work lost."""
-        preserved = _preserved(done, period)
+        preserved = _preserved(done, period, ckpt_age)
         newrem = service_need[pid] - preserved + overhead
         remaining[pid] = newrem
         if service_need[pid] > 0:
@@ -259,6 +274,41 @@ def run_open_faults(sim, core, return_samples: bool = False):
             running[j] = pid
         fail_left[pid] = int(fail_counts[pid % T])
         n_sys += 1
+
+    def spec_hedge() -> None:
+        """At most one straggler backup per event (the device stanza's
+        semantics): the most-overdue unpaired in-flight task whose age
+        strictly exceeds its type's observed hq-quantile gets a
+        late-binding backup on a different pool. The backup inherits the
+        primary's arrival time (the winner's response is end-to-end) and
+        is exempt from transient failures."""
+        nonlocal n_spec
+        if shist is None:
+            return
+        best, best_score = -1, 0.0
+        for jj in range(l):
+            for pp in proc_tasks[jj]:
+                if pp >= T or partner[pp] >= 0:
+                    continue
+                score = (now - entry_time[pp]) - th[task_type[pp]]
+                if score > best_score:
+                    best, best_score = pp, score
+        if best < 0:
+            return
+        pp = best
+        tt = int(task_type[pp])
+        cc = cls_l[tt]
+        if n_sys >= limits[cc]:
+            return
+        j3 = route_to(tt, excl=task_proc[pp])
+        if j3 < 0 or len(proc_tasks[j3]) >= Q:
+            return
+        admit(pp + T, tt, j3, size0[pp])
+        entry_time[pp + T] = entry_time[pp]
+        fail_left[pp + T] = 0
+        partner[pp] = pp + T
+        partner[pp + T] = pp
+        n_spec += 1
 
     while aptr < T:
         # ---- next completion (relative dt) over AVAILABLE pools ----
@@ -303,6 +353,7 @@ def run_open_faults(sim, core, return_samples: bool = False):
                     rec_on = True
                     rec_pre = n_sys
                     rec_t0 = now
+            spec_hedge()
             continue
 
         if ta - now <= best_dt:
@@ -330,6 +381,7 @@ def run_open_faults(sim, core, return_samples: bool = False):
             if not admitted and in_w:
                 cls_drop[c] += 1
             aptr += 1
+            spec_hedge()
             continue
 
         # ---- completion attempt ----
@@ -352,6 +404,7 @@ def run_open_faults(sim, core, return_samples: bool = False):
             if in_w:
                 wasted += lost
                 failures += 1
+            spec_hedge()
             continue
         # ---- successful completion (first-completion-wins) ----
         proc_tasks[j].remove(pid)
@@ -384,6 +437,12 @@ def run_open_faults(sim, core, return_samples: bool = False):
             rec_sum += now - rec_t0
             rec_n += 1
             rec_on = False
+        if shist is not None:
+            # estimator learns every successful completion, windowed or not
+            # (the device accumulator does the same)
+            shist[t, hist.bin_index(now - entry_time[pid])] += 1
+            if shist[t].sum() >= hmin:
+                th[t] = hist.quantile(shist[t], hq)
         if in_w:
             resp = now - entry_time[pid]
             c = cls_l[t]
@@ -393,6 +452,7 @@ def run_open_faults(sim, core, return_samples: bool = False):
             if resp <= deadlines[c]:
                 cls_dm[c] += 1
             samples[c].append(resp)
+        spec_hedge()
 
     if rec_on:                      # censored at the window end
         rec_sum += max(t_end - rec_t0, 0.0)
@@ -405,6 +465,7 @@ def run_open_faults(sim, core, return_samples: bool = False):
         wasted_work=wasted / elapsed if elapsed > 0 else 0.0,
         failures=int(failures),
         topology_events=int(n_topo),
+        spec_hedges=int(n_spec),
         reroute_latency=rr_sum / rr_n if rr_n else float("nan"),
         recovery_time=rec_sum / rec_n if rec_n else float("nan"))
     from repro.traffic.host import _open_metrics as _om
@@ -459,6 +520,7 @@ def run_closed_faults(sim, core):
     S = len(f_times)
     scale_rows = real.scale
     period = _INF if fs.ckpt_period is None else float(fs.ckpt_period)
+    ckpt_age = float(fs.ckpt_age)
     overhead = float(fs.restart_overhead)
 
     core.reset(mu, n_per_type)
@@ -565,7 +627,7 @@ def run_closed_faults(sim, core):
     warmup = cfg.warmup_completions
 
     def restart(pid: int, done: float) -> float:
-        preserved = _preserved(done, period)
+        preserved = _preserved(done, period, ckpt_age)
         newrem = service_need[pid] - preserved + overhead
         remaining[pid] = newrem
         if service_need[pid] > 0:

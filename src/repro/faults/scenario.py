@@ -32,8 +32,11 @@ RNG streams (documented contract, tested in tests/test_faults.py):
 * transient-failure counts (open mode): ``np.random.default_rng([seed, 2])``
   — the host engines own ``default_rng(seed)`` / ``[seed, 0]`` / ``[seed, 1]``;
 * storm generation: ``np.random.default_rng([seed, 3])``;
+* stochastic availability realization (`repro.faults.hazard`):
+  ``np.random.default_rng([seed, 4, pool])`` per pool;
 * device per-attempt failure draw (closed mode): ``fold_in(sub, 3)``;
-* device backup-hedge RD routing: ``fold_in(sub, 4)``
+* device backup-hedge RD routing: ``fold_in(sub, 4)``;
+* device straggler-triggered speculative-backup routing: ``fold_in(sub, 5)``
   (``fold_in(sub, 1)`` routes, ``fold_in(sub, 2)`` re-draws the mix).
 
 None of these touch the pre-existing streams, so a scenario whose events
@@ -49,8 +52,10 @@ import numpy as np
 # tests can assert the contract instead of magic numbers.
 HOST_FAIL_STREAM = 2
 HOST_STORM_STREAM = 3
+HOST_HAZARD_STREAM = 4
 DEVICE_FAIL_FOLD = 3
 DEVICE_HEDGE_FOLD = 4
+DEVICE_SPEC_HEDGE_FOLD = 5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +85,32 @@ class FaultRealization:
     times: np.ndarray
     scale: np.ndarray
 
+    def __post_init__(self):
+        times = np.asarray(self.times, dtype=np.float64)
+        scale = np.asarray(self.scale, dtype=np.float64)
+        if times.ndim != 1 or scale.ndim != 2:
+            raise ValueError("times must be (S,) and scale (S + 1, l)")
+        if scale.shape[0] != times.shape[0] + 1:
+            raise ValueError(
+                f"scale must carry one more segment than times: got "
+                f"times {times.shape} with scale {scale.shape}")
+        if (scale < 0.0).any():
+            raise ValueError("segment scales must be >= 0")
+        # Strictly increasing breakpoints; +inf is legal only as trailing
+        # padding (see `padded`), where every padded segment repeats the
+        # last live one.
+        finite = np.isfinite(times)
+        n_fin = int(finite.sum())
+        if finite[n_fin:].any():
+            raise ValueError("non-finite breakpoint times must be a "
+                             "trailing +inf pad, not interleaved")
+        if np.isneginf(times).any() or np.isnan(times).any():
+            raise ValueError("breakpoint times must be finite or +inf pad")
+        if n_fin and not (np.diff(times[:n_fin]) > 0.0).all():
+            raise ValueError(
+                "breakpoint times must be strictly increasing — merge "
+                "same-time events into one segment at realize time")
+
     @property
     def n_events(self) -> int:
         return int(self.times.shape[0])
@@ -103,8 +134,11 @@ class FaultScenario:
     fail_prob: float = 0.0
     fail_cap: int = 4
     ckpt_period: float | None = None
+    ckpt_age: float = 0.0
     restart_overhead: float = 0.0
     hedge_classes: tuple = ()
+    hedge_quantile: float = 0.0
+    hedge_min_obs: int = 32
     refresh_targets: bool = False
     name: str = "faults"
 
@@ -115,8 +149,16 @@ class FaultScenario:
             raise ValueError("fail_cap must be >= 0")
         if self.ckpt_period is not None and not self.ckpt_period > 0:
             raise ValueError("ckpt_period must be > 0 (or None for full re-execution)")
+        if not (self.ckpt_age >= 0.0 and np.isfinite(self.ckpt_age)):
+            raise ValueError("ckpt_age must be finite and >= 0 (0 = the "
+                             "uniform-period policy)")
         if self.restart_overhead < 0:
             raise ValueError("restart_overhead must be >= 0")
+        if not (0.0 <= self.hedge_quantile < 1.0):
+            raise ValueError(f"hedge_quantile must be in [0, 1) (0 disables "
+                             f"speculative hedging), got {self.hedge_quantile}")
+        if self.hedge_min_obs < 1:
+            raise ValueError("hedge_min_obs must be >= 1")
         for e in self.events:
             if not isinstance(e, PoolEvent):
                 raise TypeError(f"events must be PoolEvent instances, got {type(e)}")
@@ -125,7 +167,7 @@ class FaultScenario:
     def is_null(self) -> bool:
         """True when the scenario cannot change any trajectory at all."""
         return (not self.events and self.fail_prob == 0.0
-                and not self.hedge_classes)
+                and not self.hedge_classes and self.hedge_quantile == 0.0)
 
     # ---------------------------------------------------------------- realize
     def realize(self, l: int, *, require_alive: bool = False) -> FaultRealization:
@@ -143,7 +185,29 @@ class FaultScenario:
         times: list[float] = []
         cur = np.ones(l)
         segs = [cur.copy()]
+        prev_key = None
         for e in evs:
+            key = (float(e.time), int(e.pool))
+            if key == prev_key:
+                raise ValueError(
+                    f"two events for pool {e.pool} at t={e.time} — event "
+                    f"order would be ambiguous; merge them into one")
+            prev_key = key
+            if float(e.scale) == cur[e.pool]:
+                if e.scale == 0.0:
+                    raise ValueError(
+                        f"overlapping crash windows for pool {e.pool}: "
+                        f"crash at t={e.time} while the pool is already "
+                        f"down — merge the windows into one crash/recovery "
+                        f"pair")
+                if e.scale == 1.0:
+                    raise ValueError(
+                        f"recovery event for pool {e.pool} at t={e.time} "
+                        f"without a matching prior crash/degrade — the "
+                        f"pool is already at full rate")
+                raise ValueError(
+                    f"redundant event for pool {e.pool} at t={e.time}: "
+                    f"scale is already {e.scale}")
             if not times or e.time > times[-1]:
                 times.append(float(e.time))
                 cur = cur.copy()
@@ -171,10 +235,22 @@ class FaultScenario:
         return np.cumprod(u < self.fail_prob, axis=1).sum(axis=1).astype(np.int32)
 
     def preserved_work(self, done: float) -> float:
-        """Checkpoint-restart model: work preserved after ``done`` seconds."""
+        """Checkpoint-restart model: work preserved after ``done`` seconds.
+
+        With the age-threshold policy (``ckpt_age = a0 > 0``) a task takes
+        no checkpoints before age ``a0`` — young tasks restart from scratch
+        because re-execution is cheaper than the checkpoint write — then
+        checkpoints every ``ckpt_period`` from ``a0`` on:
+        ``preserved = a0 + floor((done - a0) / period) * period``.
+        ``ckpt_age = 0`` is bit-identical to the PR 7 uniform-period model.
+        """
         if self.ckpt_period is None or done <= 0.0:
             return 0.0
-        return float(np.floor(done / self.ckpt_period) * self.ckpt_period)
+        a0 = self.ckpt_age
+        if done < a0:
+            return 0.0
+        return float(a0 + np.floor((done - a0) / self.ckpt_period)
+                     * self.ckpt_period)
 
 
 # ------------------------------------------------------------------ builders
@@ -218,10 +294,29 @@ def make_storm(l: int, *, n_bursts: int = 1, group_size: int = 2,
     t0, t1 = window
     starts = np.sort(rng.uniform(t0, t1, size=n_bursts))
     group_size = min(group_size, l - 1)
-    events: list[PoolEvent] = []
+    raw: list[tuple[float, float, int]] = []
     for tb in starts:
         pools = rng.choice(l, size=group_size, replace=False)
         for p in np.sort(pools):
-            events.append(PoolEvent(float(tb), int(p), float(scale)))
-            events.append(PoolEvent(float(tb) + float(downtime), int(p), 1.0))
+            raw.append((float(tb), float(tb) + float(downtime), int(p)))
+    # Merge per-pool overlapping or touching down-windows: multi-burst
+    # storms routinely re-hit a pool before it recovered, and realize()
+    # rejects overlapping crash windows. Storms with disjoint windows
+    # come out bit-identical to the pre-merge emission order.
+    by_pool: dict[int, list[list[float]]] = {}
+    merged_any = False
+    for tb, te, p in sorted(raw, key=lambda r: (r[2], r[0])):
+        ivs = by_pool.setdefault(p, [])
+        if ivs and tb <= ivs[-1][1]:
+            ivs[-1][1] = max(ivs[-1][1], te)
+            merged_any = True
+        else:
+            ivs.append([tb, te])
+    if merged_any:
+        raw = sorted((iv[0], iv[1], p)
+                     for p, ivs in by_pool.items() for iv in ivs)
+    events: list[PoolEvent] = []
+    for tb, te, p in raw:
+        events.append(PoolEvent(tb, p, float(scale)))
+        events.append(PoolEvent(te, p, 1.0))
     return tuple(events)

@@ -32,21 +32,28 @@ def segment_targets(policy: Policy, mu: np.ndarray, mix: np.ndarray,
         return np.broadcast_to(base, (n_seg,) + base.shape).copy()
 
     floor = _CRASH_MU_REL * float(mu.max())
-    scaled = [np.maximum(mu * np.maximum(real.scale[s], 0.0)[None, :], floor)
-              for s in range(n_seg)]
-    unchanged = [bool((real.scale[s] == 1.0).all()) for s in range(n_seg)]
+    # Hazard-realized schedules repeat scale rows heavily (every up segment
+    # is all-ones, every repair of the same pool reproduces the same row):
+    # solve each distinct row once and scatter back through the inverse map.
+    uniq, inv = np.unique(real.scale, axis=0, return_inverse=True)
+    n_uniq = uniq.shape[0]
+    scaled = [np.maximum(mu * np.maximum(uniq[u], 0.0)[None, :], floor)
+              for u in range(n_uniq)]
+    unchanged_u = [bool((uniq[u] == 1.0).all()) for u in range(n_uniq)]
     if policy.supports_jax_batch:
         mus = np.stack([policy.device_mu(m) for m in scaled])
         tgts, _, _ = solve_targets_grid_jax(
             mus, mix[None, :],
             objective=getattr(policy, "jax_objective", "max-x"),
             power=getattr(policy, "power", None))
-        out = np.asarray(tgts[:, 0], dtype=np.int64)
+        out_u = np.asarray(tgts[:, 0], dtype=np.int64)
     else:
-        out = np.stack([base if unchanged[s]
-                        else np.asarray(policy.solve_target(scaled[s], mix),
-                                        dtype=np.int64)
-                        for s in range(n_seg)])
+        out_u = np.stack([base if unchanged_u[u]
+                          else np.asarray(policy.solve_target(scaled[u], mix),
+                                          dtype=np.int64)
+                          for u in range(n_uniq)])
+    out = out_u[inv].copy()
+    unchanged = [unchanged_u[inv[s]] for s in range(n_seg)]
     # Down pools carry zero target: closed solvers park surplus population
     # on zero-gain columns arbitrarily, and while the availability mask
     # already makes those slots unroutable, a zero column keeps the

@@ -893,6 +893,63 @@ class SchedulerCore:
         self._backlog[j] += self._inv_mu_rows[task_type][j]
         return j
 
+    def route_backup(self, task_type: int, exclude: int,
+                     avail: np.ndarray | None = None,
+                     view: SystemView | None = None,
+                     rng: np.random.Generator | None = None) -> int:
+        """Choose the pool for a speculative backup copy of a resident task.
+
+        The hedge-aware twin of `route`: the backup may never land on the
+        primary's pool `exclude` (a straggler duplicated onto its own pool
+        buys nothing), and an optional `avail` mask further restricts the
+        menu to pools currently up. Returns -1 when no pool is eligible —
+        the caller skips the hedge and the core's books are untouched.
+        On success the live count/backlog update is identical to `route`,
+        so a later `complete`/`unroute` balances it the same way.
+        """
+        ok = (np.ones(self.l, dtype=bool) if avail is None
+              else np.asarray(avail, dtype=bool).copy())
+        if 0 <= exclude < self.l:
+            ok[exclude] = False
+        if not ok.any():
+            return -1
+        if self.policy.needs_target:
+            counts = view.counts if view is not None else self.counts
+            if self._mix is not None:
+                target = self._target_for(self._mix, key_hint=self._mix_key)
+            else:
+                mix = counts.sum(axis=1)
+                mix[task_type] += 1        # include the backup copy
+                target = self._target_for(mix)
+            deficit = (target[task_type] - counts[task_type]
+                       ).astype(np.float64)
+            deficit[~ok] = -np.inf
+            best = np.flatnonzero(deficit == deficit.max())
+            j = int(best[np.argmax(self.mu[task_type][best])])
+        else:
+            v = view if view is not None else self._internal_view()
+            if not ok.all():
+                # Same masking convention as the fault engines: ineligible
+                # pools look infinitely loaded and infinitely slow, so every
+                # stateless rule (LB/JSQ/BF/RD via choose) avoids them.
+                vmu = np.array(v.mu, dtype=np.float64)
+                vmu[:, ~ok] = -np.inf
+                bw = np.array(v.backlog_work, dtype=np.float64)
+                bt = np.array(v.backlog_tasks, dtype=np.float64)
+                bw[~ok] = np.inf
+                bt[~ok] = np.inf
+                v = SystemView(counts=v.counts, backlog_work=bw,
+                               backlog_tasks=bt, mu=vmu)
+            j = int(self.policy.choose(
+                task_type, v, rng if rng is not None else self._rng))
+            if not ok[j]:       # random policies ignore the mu mask
+                opts = np.flatnonzero(ok)
+                r = rng if rng is not None else self._rng
+                j = int(opts[r.integers(len(opts))])
+        self._counts_rows[task_type][j] += 1
+        self._backlog[j] += self._inv_mu_rows[task_type][j]
+        return j
+
     def route_many(self, task_types) -> np.ndarray:
         """Route a burst of arrivals through one jit-compiled largest-deficit
         kernel (fleet-scale dispatch). Requires a pinned type mix — the

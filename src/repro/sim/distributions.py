@@ -109,12 +109,39 @@ class HyperExponential(TaskSizeDistribution):
         return x / self._raw_mean
 
 
+@dataclasses.dataclass
+class Weibull(TaskSizeDistribution):
+    """Weibull with shape ``k``, normalized to mean 1.
+
+    ``k < 1`` is heavy-tailed with decreasing hazard (many tiny tasks,
+    rare huge ones), ``k > 1`` concentrates around the mean with
+    increasing hazard, and ``k = 1`` degenerates to Exponential. The
+    same family parameterizes the up/down availability processes in
+    `repro.faults.hazard`; here it is a task-size law. numpy's
+    ``rng.weibull(k)`` draws scale-1 variates with mean Gamma(1 + 1/k),
+    so we divide by that to mean-match.
+    """
+
+    k: float = 2.0
+    name: str = "weibull"
+
+    def __post_init__(self):
+        if not self.k > 0:
+            raise ValueError(f"weibull shape must be > 0, got {self.k}")
+        from math import gamma
+        object.__setattr__(self, "_raw_mean", float(gamma(1.0 + 1.0 / self.k)))
+
+    def sample(self, rng, n=1):
+        return rng.weibull(self.k, size=n) / self._raw_mean
+
+
 DISTRIBUTIONS = {
     "exponential": Exponential,
     "bounded_pareto": BoundedPareto,
     "uniform": Uniform,
     "constant": Constant,
     "hyperexp": HyperExponential,
+    "weibull": Weibull,
 }
 
 

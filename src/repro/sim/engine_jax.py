@@ -74,6 +74,8 @@ def _dist_spec(distribution) -> tuple:
         return (name, tuple(float(p) for p in distribution.probs),
                 tuple(float(r) for r in distribution.rates),
                 float(distribution._raw_mean))
+    if name == "weibull":
+        return (name, float(distribution.k), float(distribution._raw_mean))
     if name in ("exponential", "uniform", "constant"):
         return (name,)
     raise ValueError(f"no on-device sampler for distribution {name!r}")
@@ -88,6 +90,11 @@ def _size_sampler(spec: tuple):
         return lambda key: 2.0 * jax.random.uniform(key, dtype=jnp.float32)
     if name == "constant":
         return lambda key: jnp.float32(1.0)
+    if name == "weibull":
+        k, wraw = spec[1], spec[2]
+        # Standard Weibull via inverse CDF: (-ln U)^(1/k) = Exp(1)^(1/k).
+        return lambda key: (jax.random.exponential(key, dtype=jnp.float32)
+                            ** jnp.float32(1.0 / k) / jnp.float32(wraw))
     if name == "hyperexp":
         probs, rates, hraw = spec[1:]
         logp = jnp.log(jnp.asarray(probs, jnp.float32))
@@ -121,9 +128,9 @@ def _expected_mix(probs: np.ndarray, n: int) -> np.ndarray:
                                              "has_mix", "has_faults",
                                              "n_faults", "n_target"))
 def _simulate_fleet(mu, P, target, rank, types0, keys, modes, mix_probs,
-                    f_times, f_scale, seg_tgt, period, overhead, fail_p,
-                    fail_capv, *, order, dist_specs, n_steps, warmup, cls_of,
-                    has_mix, has_faults, n_faults, n_target):
+                    f_times, f_scale, seg_tgt, period, c_age, overhead,
+                    fail_p, fail_capv, *, order, dist_specs, n_steps, warmup,
+                    cls_of, has_mix, has_faults, n_faults, n_target):
     """vmapped scan core. All array args carry a leading batch axis B:
     mu/P/target/rank (B, k, l), types0 (B, n), keys (B, 2), modes (B,),
     mix_probs (B, k). `cls_of` is the static (k,) type -> class map and
@@ -142,7 +149,7 @@ def _simulate_fleet(mu, P, target, rank, types0, keys, modes, mix_probs,
     n_cls = max(cls_of) + 1
 
     def one(mu, P, target, rank, types0, key, mode, mix_p, f_times, f_scale,
-            seg_tgt, period, overhead, fail_p, fail_capv):
+            seg_tgt, period, c_age, overhead, fail_p, fail_capv):
         k, l = mu.shape
         n = types0.shape[0]
         order_ps = order == "PS"
@@ -352,12 +359,21 @@ def _simulate_fleet(mu, P, target, rank, types0, keys, modes, mix_probs,
                     run_pid = run_pid.at[j_star].set(new_head)
 
             if has_faults:
+                # checkpoint-restart: preserved work after `done` seconds.
+                # Age-threshold policy (ckpt_age = a0): no checkpoints
+                # before a0, then every `period` from a0 on; a0 = 0 is the
+                # PR 7 uniform grid, value-identical.
+                def _preserved(done):
+                    p_fin = jnp.where(jnp.isfinite(period), period, 0.0)
+                    return jnp.where(
+                        jnp.isfinite(period) & (done >= c_age),
+                        c_age + jnp.floor(
+                            jnp.maximum(done - c_age, 0.0)
+                            / jnp.maximum(period, 1e-30)) * p_fin, 0.0)
+
                 # transient failure: rewind to the last checkpoint + overhead
                 done_f = need[pid]
-                pres_f = jnp.where(
-                    jnp.isfinite(period),
-                    jnp.floor(done_f / jnp.maximum(period, 1e-30))
-                    * jnp.where(jnp.isfinite(period), period, 0.0), 0.0)
+                pres_f = _preserved(done_f)
                 newrem_f = done_f - pres_f + overhead
                 wasted = wasted + jnp.where(fail_now & in_win,
                                             done_f - pres_f, 0.0)
@@ -384,10 +400,7 @@ def _simulate_fleet(mu, P, target, rank, types0, keys, modes, mix_probs,
                 crash_col = do_fault & (sc > 0.0) & (sc_next <= 0.0)  # (l,)
                 hit = crash_col[proc]
                 done_t = jnp.clip(need - remaining, 0.0, None)
-                pres_t = jnp.where(
-                    jnp.isfinite(period),
-                    jnp.floor(done_t / jnp.maximum(period, 1e-30))
-                    * jnp.where(jnp.isfinite(period), period, 0.0), 0.0)
+                pres_t = _preserved(done_t)
                 newrem_t = need - pres_t + overhead
                 wasted = wasted + jnp.where(
                     in_win, jnp.where(hit, done_t - pres_t, 0.0).sum(), 0.0)
@@ -484,8 +497,8 @@ def _simulate_fleet(mu, P, target, rank, types0, keys, modes, mix_probs,
         return base
 
     return jax.vmap(one)(mu, P, target, rank, types0, keys, modes, mix_probs,
-                         f_times, f_scale, seg_tgt, period, overhead, fail_p,
-                         fail_capv)
+                         f_times, f_scale, seg_tgt, period, c_age, overhead,
+                         fail_p, fail_capv)
 
 
 def simulate_batch(mu, targets, types0, seeds, *, distribution, order="PS",
@@ -582,6 +595,8 @@ def simulate_batch(mu, targets, types0, seeds, *, distribution, order="PS",
         f_scale = jnp.asarray(faults.scale, jnp.float32)
         seg_tgt = jnp.asarray(faults.seg_targets, jnp.int32)
         f_period = jnp.asarray(faults.ckpt_period, jnp.float32)
+        f_age = jnp.asarray(faults.ckpt_age if faults.ckpt_age is not None
+                            else np.zeros(B), jnp.float32)
         f_over = jnp.asarray(faults.restart_overhead, jnp.float32)
         f_prob = jnp.asarray(faults.fail_prob, jnp.float32)
         f_cap = jnp.asarray(faults.fail_cap, jnp.int32)
@@ -591,6 +606,7 @@ def simulate_batch(mu, targets, types0, seeds, *, distribution, order="PS",
         f_scale = jnp.ones((B, 1, l), jnp.float32)
         seg_tgt = jnp.zeros((B, 1, k, l), jnp.int32)
         f_period = jnp.full(B, np.inf, jnp.float32)
+        f_age = jnp.zeros(B, jnp.float32)
         f_over = jnp.zeros(B, jnp.float32)
         f_prob = jnp.zeros(B, jnp.float32)
         f_cap = jnp.zeros(B, jnp.int32)
@@ -599,7 +615,7 @@ def simulate_batch(mu, targets, types0, seeds, *, distribution, order="PS",
         jnp.asarray(targets, jnp.int32), jnp.asarray(ranks), types0,
         jnp.asarray(keys), jnp.asarray(modes),
         jnp.asarray(mix_probs, jnp.float32), f_times, f_scale, seg_tgt,
-        f_period, f_over, f_prob, f_cap, order=order,
+        f_period, f_age, f_over, f_prob, f_cap, order=order,
         dist_specs=dist_specs, n_steps=n_steps,
         warmup=int(warmup_completions), cls_of=tuple(int(c) for c in cls),
         has_mix=has_mix, has_faults=has_faults, n_faults=n_faults,

@@ -146,6 +146,10 @@ class SimMetrics:
     topology_events: int | None = None
     reroute_latency: float | None = None
     recovery_time: float | None = None
+    # Straggler-triggered speculative backups launched (open mode with
+    # faults.hedge_quantile > 0; None elsewhere). Cancelled losers are
+    # already charged into wasted_work.
+    spec_hedges: int | None = None
 
 
 class ClosedNetworkSimulator:
@@ -183,6 +187,9 @@ class ClosedNetworkSimulator:
                 raise ValueError("hedge_classes require open/traffic mode "
                                  "(a closed network has no duplicate "
                                  "admission slot)")
+            if cfg.faults.hedge_quantile > 0.0 and cfg.traffic is None:
+                raise ValueError("hedge_quantile (speculative straggler "
+                                 "hedging) requires open/traffic mode")
             if cfg.type_mix is not None and not cfg.faults.is_null:
                 raise ValueError("faults + type_mix is not supported in "
                                  "closed mode")

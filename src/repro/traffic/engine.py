@@ -43,7 +43,8 @@ from repro.sched.api import (_mu_tiebreak_ranks, deficit_route_jax,
 from repro.sim.engine_jax import (MODE_BF, MODE_DEFICIT, MODE_JSQ, MODE_LB,
                                   MODE_RD, _device_route_mode, _dist_spec,
                                   _size_sampler)
-from repro.traffic.quantiles import QUANTILES, LogHistogram
+from repro.traffic.quantiles import (QUANTILES, LogHistogram,
+                                     hist_quantile_rows_jax)
 
 _BIG_STAMP = np.int32(2**31 - 1)
 
@@ -51,13 +52,14 @@ _BIG_STAMP = np.int32(2**31 - 1)
 @functools.partial(jax.jit, static_argnames=(
     "order", "dist_specs", "n_arrivals", "n_slots", "warmup", "cls_of",
     "qcap", "hist_lo", "hist_hi", "hist_bins", "has_faults", "n_faults",
-    "total_steps"))
+    "total_steps", "hedge_spec"))
 def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
                          admit, deadlines, f_times, f_scale, seg_tgt,
-                         fail_cnt, hedge_c, period, overhead, *, order,
-                         dist_specs, n_arrivals, n_slots, warmup, cls_of,
-                         qcap, hist_lo, hist_hi, hist_bins, has_faults,
-                         n_faults, total_steps):
+                         fail_cnt, hedge_c, period, c_age, overhead, hq,
+                         hmin, *, order, dist_specs, n_arrivals, n_slots,
+                         warmup, cls_of, qcap, hist_lo, hist_hi, hist_bins,
+                         has_faults, n_faults, total_steps,
+                         hedge_spec=False):
     """vmapped open scan core. Batched args: mu/P/target/rank (B, k, l),
     arr_t/arr_ty (B, T), keys (B, 2), modes (B,), admit (B, C) in-system
     caps, deadlines (B, C). Statics: the service order, per-class size
@@ -68,10 +70,17 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
     f_scale (B, S + 1, l) per-segment mu multipliers and seg_tgt
     (B, S + 1, k, l) per-segment routing targets; fail_cnt (B, T) are the
     host-realized per-arrival transient-failure counts, hedge_c (B, C)
-    flags hedged classes, period / overhead (B,) the checkpoint-restart
-    model. With has_faults=False every fault branch is dropped at trace
-    time, so the compiled no-fault program — and its results — are
-    unchanged; total_steps then equals 2 * T."""
+    flags hedged classes, period / c_age / overhead (B,) the
+    checkpoint-restart model (`c_age` the age-threshold policy). With
+    hedge_spec=True the straggler-triggered speculative-hedge stanza is
+    compiled in: a per-type response-time log-histogram accumulates on
+    every successful completion, and an in-flight unpaired task whose
+    age exceeds the observed hq-quantile (after hmin observations)
+    launches one late-binding backup per step on a different pool
+    (fold_in(sub, 5) routing), first-completion-wins as for class
+    hedges. With has_faults=False every fault branch is dropped at
+    trace time, so the compiled no-fault program — and its results —
+    are unchanged; total_steps then equals 2 * T."""
     samplers = [_size_sampler(s) for s in dist_specs]
     n_cls = max(cls_of) + 1
     T = n_arrivals
@@ -79,7 +88,8 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
     log_g = float(np.log(hist_hi / hist_lo) / hist_bins)
 
     def one(mu, P, target, rank, arr_t, arr_ty, key, mode, admit, deadlines,
-            f_times, f_scale, seg_tgt, fail_cnt, hedge_c, period, overhead):
+            f_times, f_scale, seg_tgt, fail_cnt, hedge_c, period, c_age,
+            overhead, hq, hmin):
         k, l = mu.shape
         order_ps = order == "PS"
         order_prio = order == "PRIO"
@@ -121,13 +131,16 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
 
         if has_faults:
             # (sp, fail_left, partner, size0, wasted, failcnt, rrp_s, rrp_n,
-            #  rr_s, rr_n, rec_on, rec_pre, rec_t0, rec_s, rec_n, topo)
+            #  rr_s, rr_n, rec_on, rec_pre, rec_t0, rec_s, rec_n, topo
+            #  [, shist — per-type response histogram, hedge_spec only])
             fstate = (jnp.int32(0), jnp.zeros(ns, jnp.int32),
                       jnp.full(ns, -1, jnp.int32), jnp.zeros(ns, jnp.float32),
                       jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0),
                       jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0),
                       jnp.bool_(False), jnp.int32(0), jnp.float32(0.0),
                       jnp.float32(0.0), jnp.float32(0.0), jnp.int32(0))
+            if hedge_spec:
+                fstate = fstate + (jnp.zeros((k, hist_bins), jnp.float32),)
         else:
             fstate = ()
         state = (key, jnp.float32(0.0), jnp.int32(0),
@@ -157,7 +170,9 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
             if has_faults:
                 (sp, fail_left, partner, size0, wasted, failcnt, rrp_s,
                  rrp_n, rr_s, rr_n, rec_on, rec_pre, rec_t0, rec_s, rec_n,
-                 topo) = fstate
+                 topo) = fstate[:16]
+                if hedge_spec:
+                    shist = fstate[16]
                 sc = f_scale[sp]                       # (l,) current segment
                 avail = sc > 0.0
                 sc_safe = jnp.where(avail, sc, 1.0)
@@ -296,14 +311,27 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
             proc = proc.at[pid].set(jnp.where(succ, -1, proc[pid]))
             if has_faults:
                 inw_t = (now > t_warm) & (now <= t_end)
+
+                # checkpoint-restart preserved work; ckpt_age = a0 defers
+                # the first checkpoint (a0 = 0 is PR 7's uniform grid,
+                # value-identical)
+                def _preserved(done):
+                    p_fin = jnp.where(jnp.isfinite(period), period, 0.0)
+                    return jnp.where(
+                        jnp.isfinite(period) & (done >= c_age),
+                        c_age + jnp.floor(
+                            jnp.maximum(done - c_age, 0.0)
+                            / jnp.maximum(period, 1e-30)) * p_fin, 0.0)
+
+                if hedge_spec:
+                    # running per-type service estimator: every successful
+                    # completion's response, window or not (host mirrors)
+                    shist = shist.at[t_done, b].add(
+                        jnp.where(succ, 1.0, 0.0))
                 # failed attempt: the full service was done, then lost back
                 # to the last checkpoint (host restart(pid, need))
                 done_f = need[pid]
-                pres_f = jnp.where(jnp.isfinite(period),
-                                   jnp.floor(done_f / jnp.maximum(period,
-                                                                  1e-30))
-                                   * jnp.where(jnp.isfinite(period), period,
-                                               0.0), 0.0)
+                pres_f = _preserved(done_f)
                 newrem_f = done_f - pres_f + overhead
                 wasted = wasted + jnp.where(fail_now & inw_t, done_f - pres_f,
                                             0.0)
@@ -386,11 +414,7 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
                 act2 = proc >= 0
                 hit = act2 & crash_col[jnp.maximum(proc, 0)]
                 done_t = jnp.clip(need - remaining, 0.0, None)
-                pres_t = jnp.where(jnp.isfinite(period),
-                                   jnp.floor(done_t / jnp.maximum(period,
-                                                                  1e-30))
-                                   * jnp.where(jnp.isfinite(period), period,
-                                               0.0), 0.0)
+                pres_t = _preserved(done_t)
                 newrem_t = need - pres_t + overhead
                 wasted = wasted + jnp.where(
                     inw_t, jnp.where(hit, done_t - pres_t, 0.0).sum(), 0.0)
@@ -497,11 +521,78 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
                     run_pid = run_pid.at[j2].set(
                         jnp.where(hedge_ok & (run_pid[j2] < 0), slot2,
                                   run_pid[j2]))
+                if hedge_spec:
+                    # ---- straggler-triggered speculative backup (at most
+                    # one per step): an unpaired in-flight task whose age
+                    # crossed the observed hq-quantile of its type's
+                    # response times gets a late-binding backup on another
+                    # pool; first-completion-wins as for class hedges ----
+                    tot_k = shist.sum(1)                           # (k,)
+                    th_k = hist_quantile_rows_jax(shist, hq, hist_lo, log_g)
+                    th_k = jnp.where((hq > 0.0) & (tot_k >= hmin), th_k,
+                                     jnp.inf)
+                    # post-event availability (sp already advanced on fault
+                    # steps, so backups never land on a just-crashed pool)
+                    avail3 = f_scale[sp] > 0.0
+                    tgt3 = seg_tgt[sp]
+                    act3 = proc >= 0
+                    age = now - entry
+                    score = jnp.where(act3 & (partner < 0),
+                                      age - th_k[types], -jnp.inf)
+                    pid3 = jnp.argmax(score).astype(jnp.int32)
+                    t3 = types[pid3]
+                    c3 = cls_arr[t3]
+                    avail3 = avail3 & (cols != jnp.maximum(proc[pid3], 0))
+                    mask3 = proc[:, None] == cols[None, :]
+                    backlog3 = jnp.where(mask3, size_left[:, None],
+                                         0.0).sum(0)
+                    j3 = route_one(counts, backlog3, t3,
+                                   jax.random.fold_in(sub, 5), avail3, tgt3)
+                    slot3 = jnp.argmin(proc)
+                    launch = ((score[pid3] > 0.0) & avail3.any()
+                              & (proc[slot3] < 0)
+                              & (counts.sum() < admit[c3])
+                              & (counts.sum(0)[j3] < qcap))
+                    lc_i = jnp.where(launch, 1, 0).astype(jnp.int32)
+                    s3 = size0[pid3]
+                    sn3 = s3 / mu[t3, j3]
+                    counts = counts.at[t3, j3].add(lc_i)
+                    proc = proc.at[slot3].set(
+                        jnp.where(launch, j3, proc[slot3]))
+                    types = types.at[slot3].set(
+                        jnp.where(launch, t3, types[slot3]))
+                    remaining = remaining.at[slot3].set(
+                        jnp.where(launch, sn3, remaining[slot3]))
+                    need = need.at[slot3].set(
+                        jnp.where(launch, sn3, need[slot3]))
+                    size_left = size_left.at[slot3].set(
+                        jnp.where(launch, s3, size_left[slot3]))
+                    size0 = size0.at[slot3].set(
+                        jnp.where(launch, s3, size0[slot3]))
+                    # the backup inherits the primary's arrival, so the
+                    # winner's response is the true end-to-end one; specu-
+                    # lative attempts are exempt from transient failures
+                    entry = entry.at[slot3].set(
+                        jnp.where(launch, entry[pid3], entry[slot3]))
+                    stamp = stamp.at[slot3].set(
+                        jnp.where(launch, i, stamp[slot3]))
+                    fail_left = fail_left.at[slot3].set(
+                        jnp.where(launch, 0, fail_left[slot3]))
+                    partner = partner.at[slot3].set(
+                        jnp.where(launch, pid3, partner[slot3]))
+                    partner = partner.at[pid3].set(
+                        jnp.where(launch, slot3, partner[pid3]))
+                    if order_prio:
+                        run_pid = run_pid.at[j3].set(
+                            jnp.where(launch & (run_pid[j3] < 0), slot3,
+                                      run_pid[j3]))
             a_ptr = a_ptr + jnp.where(do_arr, 1, 0).astype(jnp.int32)
             if has_faults:
                 fstate = (sp, fail_left, partner, size0, wasted, failcnt,
                           rrp_s, rrp_n, rr_s, rr_n, rec_on, rec_pre, rec_t0,
                           rec_s, rec_n, topo)
+                if hedge_spec:
+                    fstate = fstate + (shist,)
             else:
                 fstate = ()
             return (key, now, a_ptr, proc, types, remaining, need,
@@ -516,7 +607,7 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
         elapsed = t_end - t_warm
         if has_faults:
             (_, _, _, _, wasted, failcnt, _, _, rr_s, rr_n, rec_on, _,
-             rec_t0, rec_s, rec_n, topo) = fstate
+             rec_t0, rec_s, rec_n, topo) = fstate[:16]
             # recovery still open at the horizon: censor at t_end
             rec_s = rec_s + jnp.where(rec_on,
                                       jnp.clip(t_end - rec_t0, 0.0, None),
@@ -530,7 +621,8 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
 
     return jax.vmap(one)(mu, P, target, rank, arr_t, arr_ty, keys, modes,
                          admit, deadlines, f_times, f_scale, seg_tgt,
-                         fail_cnt, hedge_c, period, overhead)
+                         fail_cnt, hedge_c, period, c_age, overhead, hq,
+                         hmin)
 
 
 def simulate_open_batch(mu, targets, arr_times, arr_types, seeds, *,
@@ -631,16 +723,28 @@ def simulate_open_batch(mu, targets, arr_times, arr_types, seeds, *,
         fail_cnt = jnp.asarray(faults.fail_counts, jnp.int32)
         hedge_c = jnp.asarray(faults.hedge, jnp.int32)
         f_period = jnp.asarray(faults.ckpt_period, jnp.float32)
+        f_age = jnp.asarray(faults.ckpt_age if faults.ckpt_age is not None
+                            else np.zeros(B), jnp.float32)
         f_over = jnp.asarray(faults.restart_overhead, jnp.float32)
+        hq_np = (np.asarray(faults.hedge_q, np.float64)
+                 if faults.hedge_q is not None else np.zeros(B))
+        hedge_spec = bool((hq_np > 0.0).any())
+        f_hq = jnp.asarray(hq_np, jnp.float32)
+        f_hmin = jnp.asarray(faults.hedge_min if faults.hedge_min is not None
+                             else np.ones(B), jnp.float32)
     else:
         n_faults, total_steps = 0, 2 * T
+        hedge_spec = False
         f_times = jnp.zeros((B, 0), jnp.float32)
         f_scale = jnp.ones((B, 1, l), jnp.float32)
         seg_tgt = jnp.zeros((B, 1, k, l), jnp.int32)
         fail_cnt = jnp.zeros((B, T), jnp.int32)
         hedge_c = jnp.zeros((B, C), jnp.int32)
         f_period = jnp.full(B, np.inf, jnp.float32)
+        f_age = jnp.zeros(B, jnp.float32)
         f_over = jnp.zeros(B, jnp.float32)
+        f_hq = jnp.zeros(B, jnp.float32)
+        f_hmin = jnp.ones(B, jnp.float32)
     out_dev = _simulate_open_fleet(
         jnp.asarray(mus, jnp.float32), jnp.asarray(P, jnp.float32),
         jnp.asarray(targets, jnp.int32), jnp.asarray(ranks),
@@ -648,12 +752,13 @@ def simulate_open_batch(mu, targets, arr_times, arr_types, seeds, *,
         jnp.asarray(arr_types, jnp.int32), jnp.asarray(keys),
         jnp.asarray(modes), jnp.asarray(admit, jnp.int32),
         jnp.asarray(dl, jnp.float32), f_times, f_scale, seg_tgt, fail_cnt,
-        hedge_c, f_period, f_over, order=order, dist_specs=dist_specs,
+        hedge_c, f_period, f_age, f_over, f_hq, f_hmin,
+        order=order, dist_specs=dist_specs,
         n_arrivals=T, n_slots=ns, warmup=int(warmup_arrivals),
         cls_of=tuple(int(c) for c in cls), qcap=int(queue_capacity),
         hist_lo=float(hist.lo), hist_hi=float(hist.hi),
         hist_bins=int(hist.n_bins), has_faults=has_faults,
-        n_faults=n_faults, total_steps=total_steps)
+        n_faults=n_faults, total_steps=total_steps, hedge_spec=hedge_spec)
     (h, resp_c, meas_c, energy_c, dm_c, drop_c, occ, power_int,
      elapsed) = out_dev[:9]
     h = np.asarray(h, np.float64)

@@ -89,6 +89,25 @@ class LogHistogram:
         return np.stack([self.quantiles(row, qs) for row in counts])
 
 
+def hist_quantile_rows_jax(counts, q, lo: float, log_growth: float):
+    """Traceable twin of `LogHistogram.quantile` over rows.
+
+    ``counts (R, n_bins)`` running histograms, ``q`` scalar (traced OK);
+    returns ``(R,)`` geometric-midpoint estimates using the identical
+    ceil-rank rule (`searchsorted(cumsum, rank - 0.5)` expressed as a
+    predicate sum). Empty rows return the bin-0 midpoint — callers gate
+    on their own minimum-observation count (the speculative-hedge
+    trigger masks rows below ``hedge_min_obs`` to +inf).
+    """
+    import jax.numpy as jnp
+    counts = jnp.asarray(counts)
+    total = counts.sum(axis=1)
+    rank = jnp.clip(jnp.ceil(q * total), 1.0, jnp.maximum(total, 1.0))
+    cum = jnp.cumsum(counts, axis=1)
+    b = (cum < (rank[:, None] - 0.5)).sum(axis=1)
+    return lo * jnp.exp(log_growth * (b.astype(counts.dtype) + 0.5))
+
+
 def exact_quantiles(samples, qs=QUANTILES) -> np.ndarray:
     """Exact order-statistic quantiles (inverted-CDF: the ceil(q * n)-th
     sorted sample), the host oracle the histogram path is bounded against.
@@ -101,4 +120,5 @@ def exact_quantiles(samples, qs=QUANTILES) -> np.ndarray:
     return x[ranks - 1]
 
 
-__all__ = ["LogHistogram", "exact_quantiles", "QUANTILES"]
+__all__ = ["LogHistogram", "exact_quantiles", "hist_quantile_rows_jax",
+           "QUANTILES"]

@@ -352,3 +352,66 @@ def test_closed_fault_conformance_goodput_and_lost_work(policy):
     # device redraws transient failures on its own stream: statistical parity
     assert max(g_rel) < PT_TOL and np.mean(g_rel) < 0.05, (policy, g_rel)
     assert max(w_rel) < 0.8 and np.mean(w_rel) < 0.5, (policy, w_rel)
+
+
+# ---------------------------------------------------------------------------
+# Stochastic availability (hazard) conformance: both engines consume the SAME
+# per-seed Weibull up/down realization (drawn on the dedicated [seed, 4, pool]
+# substream) with the age-threshold checkpoint policy and straggler-triggered
+# speculative hedging armed — goodput / wasted-work / drops must agree at the
+# PR 7 fault gates and crash breakpoints must match exactly.
+# ---------------------------------------------------------------------------
+from repro.faults import UpDownProcess, make_hazard_scenario  # noqa: E402
+
+
+def test_open_hazard_conformance_with_quantile_hedging():
+    pol = GrInPriorityPolicy((2.0, 1.0))
+    dist = make_distribution("exponential")
+    rows = []
+    for mi in range(len(OMUS)):
+        mu = OMUS[mi]
+        spec = _open_specs(mu)[0]
+        mix = derive_target_mix(spec, mu.shape[1], O_QCAP)
+        tgt = np.asarray(pol.solve_target(mu, mix))
+        for s in OSEEDS:
+            times, tys = spec.sample(s, O_T)
+            te = float(times[-1])
+            proc = UpDownProcess(mtbf=0.35 * te, mttr=0.06 * te,
+                                 up_shape=1.8)
+            sc = make_hazard_scenario(proc, mu.shape[1], te, s,
+                                      fail_prob=0.02, ckpt_period=0.05,
+                                      ckpt_age=0.02, hedge_quantile=0.9,
+                                      hedge_min_obs=64, refresh_targets=True)
+            cfg = open_sim_config(mu, spec, n_arrivals=O_T,
+                                  warmup_arrivals=O_WARM,
+                                  queue_capacity=O_QCAP, class_of_type=O_CLS,
+                                  target_mix=mix, distribution=dist,
+                                  order="PS", seed=s, faults=sc)
+            host = ClosedNetworkSimulator(cfg).run(pol)
+            fb = build_fault_batch([sc], mu[None], tgt[None], seeds=[s],
+                                   mode="open", policies=pol, mixes=mix,
+                                   n_arrivals=O_T, n_classes=2)
+            dev = simulate_open_batch(
+                mu[None], tgt[None], times[None], tys[None], [s],
+                distribution=dist, queue_capacity=O_QCAP, order="PS",
+                warmup_arrivals=O_WARM, class_of_type=O_CLS,
+                modes=np.full(1, MODE_DEFICIT, np.int32), faults=fb)
+            # identical realized availability: breakpoints match exactly
+            assert host.topology_events == int(dev["topology_events"][0]) > 0
+            assert host.spec_hedges > 0      # the trigger armed and fired
+            assert host.wasted_work > 0.0
+            g_rel = (abs(float(dev["goodput"][0]) - host.goodput)
+                     / host.goodput)
+            w_rel = (abs(float(dev["wasted_work"][0]) - host.wasted_work)
+                     / max(host.wasted_work, 1e-9))
+            d_abs = (abs(host.dropped - float(dev["dropped"][0]))
+                     / (O_T - O_WARM))
+            assert g_rel < F_X_TOL, (mi, s, host.goodput,
+                                     float(dev["goodput"][0]))
+            assert w_rel < F_WASTE_TOL, (mi, s, host.wasted_work,
+                                         float(dev["wasted_work"][0]))
+            assert d_abs < F_DROP_ABS, (mi, s, host.dropped,
+                                        int(dev["dropped"][0]))
+            rows.append((g_rel, w_rel, d_abs))
+    g, w, _ = np.asarray(rows).T
+    assert g.mean() < 0.05 and w.mean() < 0.25, rows

@@ -16,7 +16,8 @@ import pytest
 from repro.faults import (FaultScenario, PoolEvent, build_fault_batch,
                           crash, degrade, make_storm, segment_targets)
 from repro.faults.scenario import (DEVICE_FAIL_FOLD, DEVICE_HEDGE_FOLD,
-                                   HOST_FAIL_STREAM, HOST_STORM_STREAM)
+                                   DEVICE_SPEC_HEDGE_FOLD, HOST_FAIL_STREAM,
+                                   HOST_HAZARD_STREAM, HOST_STORM_STREAM)
 from repro.sched import get_policy
 from repro.sched.api import FixedTargetPolicy, SchedulerCore
 from repro.sim import (ClosedNetworkSimulator, SimConfig, make_distribution,
@@ -86,10 +87,14 @@ def test_fail_counts_golden_and_seed_streams():
 
 
 def test_rng_stream_isolation_constants():
-    # host: closed engine rng(seed), open arrivals [seed,0], sizes [seed,1]
-    assert {HOST_FAIL_STREAM, HOST_STORM_STREAM} == {2, 3}
-    # device: fold_in 1 route, 2 mix — fault lanes must not collide
-    assert {DEVICE_FAIL_FOLD, DEVICE_HEDGE_FOLD} == {3, 4}
+    # host: closed engine rng(seed), open arrivals [seed,0], sizes [seed,1];
+    # fault streams 2/3, hazard up/down draws on [seed,4,pool]
+    assert {HOST_FAIL_STREAM, HOST_STORM_STREAM, HOST_HAZARD_STREAM} \
+        == {2, 3, 4}
+    # device: fold_in 1 route, 2 mix — fault lanes (3 failure, 4 class
+    # hedge, 5 speculative straggler hedge) must not collide
+    assert {DEVICE_FAIL_FOLD, DEVICE_HEDGE_FOLD, DEVICE_SPEC_HEDGE_FOLD} \
+        == {3, 4, 5}
 
 
 def test_scenario_validation():

@@ -1,0 +1,529 @@
+"""Stochastic availability engine (`repro.faults.hazard`) + PR 8 satellites.
+
+Covers: hazard realization determinism and per-pool RNG stream isolation,
+the MTBF=inf null identity on all four engine paths, the hardened
+`FaultScenario` validation, `FaultBatch.padded` with ragged segment
+counts, the restart-vs-resume economics (closed forms, quadrature, JAX
+twins, Daly period, age policy), the `ckpt_age` engine semantics, the
+Weibull task-size distribution on both samplers, and straggler-triggered
+speculative hedging on host and device.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.faults import (FaultRealization, FaultScenario, PoolEvent,
+                          UpDownProcess, age_checkpoint_policy,
+                          build_fault_batch, completion_forecast, crash,
+                          expected_completion_exp,
+                          expected_completion_weibull, make_hazard_scenario,
+                          make_storm, optimal_ckpt_period,
+                          realize_availability, weibull_theta)
+from repro.sched import get_policy
+from repro.sim import (ClosedNetworkSimulator, SimConfig, make_distribution,
+                       simulate_batch)
+from repro.traffic import PoissonArrivals, TrafficSpec
+from repro.traffic.config import open_sim_config
+from repro.traffic.engine import simulate_open_batch
+from repro.traffic.quantiles import LogHistogram, hist_quantile_rows_jax
+
+MU = np.random.default_rng(31).uniform(1, 30, size=(3, 3))
+MIX = np.array([6, 6, 6])
+DIST = make_distribution("exponential")
+
+
+def _closed_cfg(**kw):
+    kw.setdefault("n_completions", 1500)
+    kw.setdefault("warmup_completions", 300)
+    return SimConfig(mu=MU, n_programs_per_type=MIX, distribution=DIST,
+                     order=kw.pop("order", "PS"), seed=kw.pop("seed", 7),
+                     **kw)
+
+
+def _open_cfg(**kw):
+    spec = TrafficSpec((PoissonArrivals(kw.pop("rate", 30.0)),),
+                       np.ones((1, 3)) / 3)
+    return open_sim_config(MU, spec, n_arrivals=kw.pop("n_arrivals", 2500),
+                           warmup_arrivals=kw.pop("warmup_arrivals", 400),
+                           queue_capacity=6, distribution=DIST,
+                           seed=kw.pop("seed", 7), **kw)
+
+
+# ------------------------- availability realization -------------------------
+
+def test_realization_deterministic_and_well_formed():
+    proc = UpDownProcess(mtbf=20.0, mttr=4.0, up_shape=1.7, down_shape=0.9)
+    ev = realize_availability(proc, 3, 100.0, seed=5)
+    assert ev == realize_availability(proc, 3, 100.0, seed=5)
+    assert ev != realize_availability(proc, 3, 100.0, seed=6)
+    assert len(ev) > 0
+    for p in range(3):
+        mine = [e for e in ev if e.pool == p]
+        times = [e.time for e in mine]
+        assert times == sorted(times)
+        assert all(0.0 < t < 100.0 for t in times)
+        # strict crash/recovery alternation, starting with a crash; a down
+        # interval straddling the horizon leaves a trailing unmatched crash
+        assert [e.scale for e in mine[:-1:2]] == [0.0] * len(mine[:-1:2])
+        assert all(e.scale == 1.0 for e in mine[1::2])
+    # the whole schedule feeds the ordinary realization machinery
+    real = FaultScenario(events=ev).realize(3)
+    assert np.all(np.diff(real.times) > 0)
+
+
+def test_realization_per_pool_stream_isolation():
+    """Restricting the process to one pool reproduces exactly that pool's
+    slice of the full fleet realization — streams are [seed, 4, pool]."""
+    proc = UpDownProcess(mtbf=15.0, mttr=3.0, up_shape=2.0)
+    full = realize_availability(proc, 3, 80.0, seed=9)
+    only1 = realize_availability(
+        UpDownProcess(mtbf=15.0, mttr=3.0, up_shape=2.0, pools=(1,)),
+        3, 80.0, seed=9)
+    assert only1 == tuple(e for e in full if e.pool == 1)
+
+
+def test_realization_weibull_shape_changes_schedule():
+    exp = realize_availability(UpDownProcess(mtbf=20.0, mttr=4.0), 2, 200.0, 3)
+    wb = realize_availability(
+        UpDownProcess(mtbf=20.0, mttr=4.0, up_shape=3.0), 2, 200.0, 3)
+    assert exp != wb
+    # wear-out (k=3) concentrates up-times near the mean: the dispersion of
+    # inter-crash gaps shrinks vs memoryless draws
+    def gaps(ev):
+        t = sorted(e.time for e in ev if e.pool == 0 and e.scale == 0.0)
+        return np.diff(t)
+    assert np.std(gaps(wb)) < np.std(gaps(exp))
+
+
+def test_updown_validation():
+    with pytest.raises(ValueError):
+        UpDownProcess(mtbf=0.0, mttr=1.0)
+    with pytest.raises(ValueError):
+        UpDownProcess(mtbf=10.0, mttr=np.inf)
+    with pytest.raises(ValueError):
+        UpDownProcess(mtbf=10.0, mttr=1.0, up_shape=0.0)
+    with pytest.raises(ValueError):
+        UpDownProcess(mtbf=10.0, mttr=1.0, scale=1.0)
+    with pytest.raises(ValueError):
+        UpDownProcess(mtbf=10.0, mttr=1.0, pools=())
+    with pytest.raises(ValueError):
+        realize_availability(UpDownProcess(mtbf=10.0, mttr=1.0, pools=(5,)),
+                             3, 50.0, 0)
+    with pytest.raises(ValueError):
+        realize_availability(UpDownProcess(mtbf=10.0, mttr=1.0), 3,
+                             float("inf"), 0)
+
+
+# --------------------- MTBF=inf null on all four paths ----------------------
+
+NULL_PROC = UpDownProcess(mtbf=float("inf"), mttr=1.0)
+
+
+def test_null_process_realizes_to_null_scenario():
+    assert NULL_PROC.is_null
+    assert realize_availability(NULL_PROC, 3, 100.0, 0) == ()
+    sc = make_hazard_scenario(NULL_PROC, 3, 100.0, 0)
+    assert sc.is_null
+    # and stays null only without other knobs
+    assert not make_hazard_scenario(NULL_PROC, 3, 100.0, 0,
+                                    fail_prob=0.1).is_null
+    assert not make_hazard_scenario(NULL_PROC, 3, 100.0, 0,
+                                    hedge_quantile=0.9).is_null
+
+
+def test_null_process_closed_host_bit_identical():
+    sc = make_hazard_scenario(NULL_PROC, 3, 100.0, 0)
+    base = ClosedNetworkSimulator(_closed_cfg()).run("grin")
+    null = ClosedNetworkSimulator(_closed_cfg(faults=sc)).run("grin")
+    assert null.throughput == base.throughput
+    assert null.mean_response_time == base.mean_response_time
+    assert null.goodput is None      # null scenario takes the fault-free path
+
+
+def test_null_process_open_host_bit_identical():
+    sc = make_hazard_scenario(NULL_PROC, 3, 100.0, 0)
+    base = ClosedNetworkSimulator(_open_cfg()).run("grin")
+    null = ClosedNetworkSimulator(_open_cfg(faults=sc)).run("grin")
+    assert null.throughput == base.throughput
+    assert null.dropped == base.dropped
+    assert null.mean_response_time == base.mean_response_time
+
+
+def test_null_process_closed_device_bit_identical():
+    sc = make_hazard_scenario(NULL_PROC, 3, 100.0, 0)
+    pol = get_policy("grin")
+    tgt = np.asarray(pol.solve_target(MU, MIX))[None]
+    types0 = np.repeat(np.arange(3), 6).astype(np.int32)[None]
+    kw = dict(distribution=DIST, order="PS", n_completions=1500,
+              warmup_completions=300)
+    base = simulate_batch(MU[None], tgt, types0, [7], **kw)
+    fb = build_fault_batch([sc], MU[None], tgt, seeds=[7], mode="closed",
+                          n_completions=1500)
+    far = simulate_batch(MU[None], tgt, types0, [7], faults=fb, **kw)
+    assert float(far["throughput"][0]) == float(base["throughput"][0])
+    np.testing.assert_allclose(far["mean_response_time"],
+                               base["mean_response_time"], rtol=2e-7)
+    assert int(far["failures"][0]) == 0
+    assert int(far["topology_events"][0]) == 0
+
+
+def test_null_process_open_device_bit_identical():
+    sc = make_hazard_scenario(NULL_PROC, 3, 100.0, 0)
+    pol = get_policy("grin")
+    tgt = np.asarray(pol.solve_target(MU, MIX))[None]
+    spec = TrafficSpec((PoissonArrivals(30.0),), np.ones((1, 3)) / 3)
+    times, tys = spec.sample(7, 2500)
+    kw = dict(distribution=DIST, queue_capacity=6, order="PS",
+              warmup_arrivals=400)
+    base = simulate_open_batch(MU[None], tgt, times[None], tys[None], [7],
+                               **kw)
+    fb = build_fault_batch([sc], MU[None], tgt, seeds=[7], mode="open",
+                          n_arrivals=2500)
+    far = simulate_open_batch(MU[None], tgt, times[None], tys[None], [7],
+                              faults=fb, **kw)
+    assert float(far["throughput"][0]) == float(base["throughput"][0])
+    assert int(far["dropped"][0]) == int(base["dropped"][0])
+    assert int(far["failures"][0]) == 0
+
+
+# ----------------------- scenario validation hardening ----------------------
+
+def test_overlapping_crash_windows_rejected():
+    ev = crash(1, 5.0, 12.0) + crash(1, 8.0, 15.0)   # second crash while down
+    with pytest.raises(ValueError, match="overlapping crash windows"):
+        FaultScenario(events=ev).realize(3)
+
+
+def test_recovery_without_crash_rejected():
+    with pytest.raises(ValueError, match="without a matching prior"):
+        FaultScenario(events=(PoolEvent(5.0, 1, 1.0),)).realize(3)
+
+
+def test_duplicate_event_time_rejected():
+    ev = (PoolEvent(5.0, 1, 0.0), PoolEvent(5.0, 1, 0.5))
+    with pytest.raises(ValueError, match="ambiguous"):
+        FaultScenario(events=ev).realize(3)
+
+
+def test_redundant_degrade_rejected():
+    ev = (PoolEvent(5.0, 1, 0.5), PoolEvent(7.0, 1, 0.5))
+    with pytest.raises(ValueError, match="redundant"):
+        FaultScenario(events=ev).realize(3)
+
+
+def test_realization_breakpoints_must_increase():
+    with pytest.raises(ValueError, match="strictly increasing"):
+        FaultRealization(times=np.array([3.0, 3.0]),
+                         scale=np.ones((3, 2)))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        FaultRealization(times=np.array([5.0, 3.0]),
+                         scale=np.ones((3, 2)))
+    with pytest.raises(ValueError):
+        FaultRealization(times=np.array([1.0, 2.0]),
+                         scale=-np.ones((3, 2)))
+    with pytest.raises(ValueError):   # finite time after the +inf padding
+        FaultRealization(times=np.array([1.0, np.inf, 2.0]),
+                         scale=np.ones((4, 2)))
+
+
+def test_overlapping_storm_bursts_merge_per_pool():
+    """make_storm merges per-pool overlapping bursts instead of emitting
+    the crash-while-down schedules the validator now rejects."""
+    rng = np.random.default_rng(0)
+    for seed in range(30):
+        storm = make_storm(3, n_bursts=4, group_size=2, window=(10.0, 30.0),
+                           downtime=8.0, seed=seed)   # heavy overlap
+        real = FaultScenario(events=storm).realize(3)  # must not raise
+        assert np.all(np.diff(real.times) > 0)
+    del rng
+
+
+# ------------------- FaultBatch.padded with ragged segments -----------------
+
+def test_fault_batch_ragged_segment_padding_and_independence():
+    short = FaultScenario(events=crash(1, 6.0, 10.0))
+    proc = UpDownProcess(mtbf=9.0, mttr=2.0, up_shape=1.5)
+    long = make_hazard_scenario(proc, 3, 70.0, 2)
+    assert len(long.events) > len(short.events)
+    pol = get_policy("grin")
+    tgt = np.asarray(pol.solve_target(MU, MIX))
+    spec = TrafficSpec((PoissonArrivals(30.0),), np.ones((1, 3)) / 3)
+    times, tys = spec.sample(7, 1200)
+    kw = dict(distribution=DIST, queue_capacity=6, order="PS",
+              warmup_arrivals=200)
+
+    n_short = short.realize(3).times.size
+    n_long = long.realize(3).times.size
+    fb = build_fault_batch([short, long], MU, np.stack([tgt, tgt]),
+                          seeds=[7, 7], mode="open", n_arrivals=1200)
+    assert fb.times.shape == (2, max(n_short, n_long))
+    # padding: +inf breakpoints, last scale row repeated
+    assert np.isinf(fb.times[0, n_short:]).all()
+    assert np.isfinite(fb.times[1, :n_long]).all()
+
+    both = simulate_open_batch(
+        np.stack([MU, MU]), np.stack([tgt, tgt]), np.stack([times, times]),
+        np.stack([tys, tys]), [7, 7], faults=fb, **kw)
+    for i, sc in enumerate([short, long]):
+        fb1 = build_fault_batch([sc], MU[None], tgt[None], seeds=[7],
+                               mode="open", n_arrivals=1200)
+        one = simulate_open_batch(MU[None], tgt[None], times[None],
+                                  tys[None], [7], faults=fb1, **kw)
+        # padding a lane out to the batch max must not change its result
+        assert int(both["topology_events"][i]) == \
+            int(one["topology_events"][0])
+        assert int(both["dropped"][i]) == int(one["dropped"][0])
+        np.testing.assert_allclose(float(both["goodput"][i]),
+                                   float(one["goodput"][0]), rtol=1e-6)
+
+
+# ----------------------- restart-vs-resume economics ------------------------
+
+def test_weibull_shape_one_matches_exponential_closed_form():
+    for w in (0.5, 2.0, 8.0):
+        e = expected_completion_exp(w, 1.0 / 5.0, 0.3)
+        wb = expected_completion_weibull(w, 5.0, 1.0, 0.3)
+        np.testing.assert_allclose(wb, e, rtol=1e-9)
+
+
+def test_expected_completion_monte_carlo():
+    """Renewal simulation agrees with the quadrature forms within 2%."""
+    rng = np.random.default_rng(0)
+    mean, restart, w = 5.0, 0.2, 3.0
+    for shape in (0.7, 1.0, 2.0):
+        theta = weibull_theta(mean, shape)
+        total = np.zeros(40000)
+        alive = np.ones(40000, bool)
+        for _ in range(200):
+            f = theta * rng.weibull(shape, alive.sum())
+            t = np.zeros(alive.sum())
+            done = f >= w
+            t[done] = w
+            t[~done] = f[~done] + restart
+            total[alive] += t
+            nxt = alive.copy()
+            nxt[alive] = ~done
+            alive = nxt
+            if not alive.any():
+                break
+        assert not alive.any()
+        ana = expected_completion_weibull(w, mean, shape, restart)
+        np.testing.assert_allclose(total.mean(), ana, rtol=0.02)
+
+
+def test_completion_forecast_age_zero_and_wearout_monotone():
+    mean, shape, restart, w = 5.0, 2.2, 0.2, 3.0
+    f0 = completion_forecast(0.0, w, mean, shape, restart)
+    fresh = expected_completion_weibull(w, mean, shape, restart)
+    np.testing.assert_allclose(f0, fresh, rtol=1e-9)
+    ages = np.array([0.0, 0.5, 1.0, 2.0, 2.9])
+    f = completion_forecast(ages, w, mean, shape, restart)
+    # under increasing hazard an older task has LESS remaining work but a
+    # worse failure outlook; near the end remaining work dominates, so
+    # only assert the forecast is finite, positive, below w + penalty
+    assert np.all(f > 0.0) and np.all(np.isfinite(f))
+    assert float(completion_forecast(w, w, mean, shape, restart)) == 0.0
+    # the hazard penalty per unit of remaining work grows with age under
+    # wear-out: the quantity speculative hedging and ckpt_age act on
+    rel_excess = (f - (w - ages)) / (w - ages)
+    assert rel_excess[3] > rel_excess[0]
+
+
+def test_completion_forecast_jax_twin_matches_host():
+    jax = pytest.importorskip("jax")
+    from repro.faults import (completion_forecast_jax,
+                              expected_completion_exp_jax)
+    del jax
+    ages = np.array([0.0, 0.4, 1.3, 2.5], np.float64)
+    host = completion_forecast(ages, 3.0, 5.0, 2.2, 0.2)
+    dev = np.asarray(completion_forecast_jax(ages, 3.0, 5.0, 2.2, 0.2))
+    np.testing.assert_allclose(dev, host, rtol=2e-4)
+    e = expected_completion_exp(np.array([0.5, 2.0]), 0.2, 0.3)
+    ej = np.asarray(expected_completion_exp_jax(np.array([0.5, 2.0]),
+                                                0.2, 0.3))
+    np.testing.assert_allclose(ej, e, rtol=2e-5)
+
+
+def test_daly_period_and_age_policy():
+    lam, cost = 0.01, 0.05
+    tau = optimal_ckpt_period(lam, cost)
+    # Newton residual of  e^{lam(tau+C)}(lam tau - 1) + 1 = 0
+    res = math.exp(lam * (tau + cost)) * (lam * tau - 1.0) + 1.0
+    assert abs(res) < 1e-10
+    assert optimal_ckpt_period(0.0, cost) == float("inf")
+    with pytest.raises(ValueError):
+        optimal_ckpt_period(lam, 0.0)
+    # shape 1: the age threshold IS the period (plain periodic policy)
+    a1, t1 = age_checkpoint_policy(1.0 / lam, 1.0, cost)
+    np.testing.assert_allclose(a1, t1, rtol=1e-12)
+    # wear-out: young tasks are cheap to re-run, first checkpoint deferred
+    ak, tk = age_checkpoint_policy(1.0 / lam, 2.2, cost)
+    assert tk == t1 and ak > a1
+
+
+# --------------------------- ckpt_age in the engines ------------------------
+
+def test_preserved_work_age_threshold():
+    sc = FaultScenario(ckpt_period=0.1, ckpt_age=0.35)
+    assert sc.preserved_work(0.2) == 0.0          # younger than a0: nothing
+    np.testing.assert_allclose(sc.preserved_work(0.36), 0.35)
+    np.testing.assert_allclose(sc.preserved_work(0.58), 0.55)
+    # a0 = 0 is exactly the PR 7 uniform grid
+    sc0 = FaultScenario(ckpt_period=0.1)
+    for d in (0.05, 0.1, 0.37, 2.0):
+        np.testing.assert_allclose(sc0.preserved_work(d),
+                                   np.floor(d / 0.1) * 0.1)
+    assert FaultScenario().preserved_work(5.0) == 0.0
+    with pytest.raises(ValueError):
+        FaultScenario(ckpt_period=0.1, ckpt_age=-1.0)
+    with pytest.raises(ValueError):
+        FaultScenario(ckpt_period=0.1, ckpt_age=float("inf"))
+
+
+def test_ckpt_age_engine_semantics_closed_host():
+    kw = dict(events=crash(1, 6.0, 10.0) + crash(0, 12.0, 15.0))
+    full = ClosedNetworkSimulator(
+        _closed_cfg(faults=FaultScenario(**kw))).run("grin")
+    grid = ClosedNetworkSimulator(_closed_cfg(
+        faults=FaultScenario(ckpt_period=0.02, **kw))).run("grin")
+    # an age threshold above every task's service time preserves nothing:
+    # the trajectory is exactly the no-checkpoint one
+    aged = ClosedNetworkSimulator(_closed_cfg(
+        faults=FaultScenario(ckpt_period=0.02, ckpt_age=50.0, **kw))
+    ).run("grin")
+    assert aged.wasted_work == full.wasted_work
+    assert aged.throughput == full.throughput
+    assert grid.wasted_work < full.wasted_work
+    # a small threshold sits between the uniform grid and no checkpoints
+    mid = ClosedNetworkSimulator(_closed_cfg(
+        faults=FaultScenario(ckpt_period=0.02, ckpt_age=0.04, **kw))
+    ).run("grin")
+    assert grid.wasted_work <= mid.wasted_work <= full.wasted_work
+
+
+def test_ckpt_age_engine_semantics_closed_device():
+    pol = get_policy("grin")
+    tgt = np.asarray(pol.solve_target(MU, MIX))[None]
+    types0 = np.repeat(np.arange(3), 6).astype(np.int32)[None]
+    kw = dict(distribution=DIST, order="PS", n_completions=1500,
+              warmup_completions=300)
+    base_kw = dict(events=crash(1, 6.0, 10.0), fail_prob=0.1)
+
+    def run(sc):
+        fb = build_fault_batch([sc], MU[None], tgt, seeds=[7], mode="closed",
+                              n_completions=1500)
+        return simulate_batch(MU[None], tgt, types0, [7], faults=fb, **kw)
+
+    full = run(FaultScenario(**base_kw))
+    grid = run(FaultScenario(ckpt_period=0.02, **base_kw))
+    aged = run(FaultScenario(ckpt_period=0.02, ckpt_age=50.0, **base_kw))
+    # unreachable age threshold == no checkpoints, bit-for-bit
+    assert float(aged["wasted_work"][0]) == float(full["wasted_work"][0])
+    assert float(aged["throughput"][0]) == float(full["throughput"][0])
+    assert float(grid["wasted_work"][0]) < float(full["wasted_work"][0])
+
+
+# ----------------------- weibull task-size distribution ---------------------
+
+def test_weibull_distribution_host_moments():
+    d = make_distribution("weibull", k=2.0)
+    x = d.sample(np.random.default_rng(0), 200000)
+    np.testing.assert_allclose(x.mean(), 1.0, rtol=0.01)
+    # E[X^2] for mean-1 Weibull(k): Gamma(1 + 2/k) / Gamma(1 + 1/k)^2
+    m2 = math.gamma(2.0) / math.gamma(1.5) ** 2
+    np.testing.assert_allclose((x ** 2).mean(), m2, rtol=0.02)
+    with pytest.raises(ValueError):
+        make_distribution("weibull", k=0.0)
+
+
+def test_weibull_distribution_device_sampler_matches():
+    jax = pytest.importorskip("jax")
+    from repro.sim.engine_jax import _dist_spec, _size_sampler
+    d = make_distribution("weibull", k=1.6)
+    spec = _dist_spec(d)
+    assert spec[0] == "weibull"
+    sample = _size_sampler(spec)
+    keys = jax.random.split(jax.random.PRNGKey(0), 100000)
+    x = np.asarray(jax.vmap(sample)(keys), np.float64)
+    hx = d.sample(np.random.default_rng(0), 100000)
+    np.testing.assert_allclose(x.mean(), 1.0, rtol=0.02)
+    np.testing.assert_allclose((x ** 2).mean(), (hx ** 2).mean(), rtol=0.04)
+
+
+# -------------------- straggler-triggered speculative hedging ---------------
+
+def test_spec_hedge_requires_open_mode():
+    with pytest.raises(ValueError):
+        ClosedNetworkSimulator(_closed_cfg(
+            faults=FaultScenario(hedge_quantile=0.9)))
+    with pytest.raises(ValueError):
+        build_fault_batch([FaultScenario(hedge_quantile=0.9)], MU[None],
+                          np.zeros((1, 3, 3), np.int64), seeds=[0],
+                          mode="closed", n_completions=100)
+    with pytest.raises(ValueError):
+        FaultScenario(hedge_quantile=1.0)
+    with pytest.raises(ValueError):
+        FaultScenario(hedge_quantile=0.9, hedge_min_obs=0)
+
+
+def test_quantile_hedge_rescues_stragglers_host():
+    from repro.faults import degrade
+    mu = np.array([[8.0, 4.0]])
+    spec = TrafficSpec((PoissonArrivals(5.0),), np.ones((1, 1)))
+    kw = dict(n_arrivals=1200, warmup_arrivals=100, queue_capacity=8,
+              distribution=DIST, seed=3)
+    ev = degrade(0, 10.0, 0.02, 60.0)
+    plain = ClosedNetworkSimulator(open_sim_config(
+        mu, spec, faults=FaultScenario(events=ev), **kw)).run("grin")
+    hedged = ClosedNetworkSimulator(open_sim_config(
+        mu, spec, faults=FaultScenario(events=ev, hedge_quantile=0.9,
+                                       hedge_min_obs=32), **kw)).run("grin")
+    assert hedged.spec_hedges > 0
+    assert plain.spec_hedges == 0
+    # backups only for OBSERVED stragglers: the trigger arms after hmin
+    # completions, then rescues tasks stuck behind the degraded pool
+    assert hedged.mean_response_time < plain.mean_response_time
+    assert hedged.goodput >= plain.goodput
+    assert hedged.wasted_work > 0.0    # cancelled losers are charged
+
+
+def test_quantile_hedge_device_agrees_with_host():
+    mu = np.array([[8.0, 4.0]])
+    spec = TrafficSpec((PoissonArrivals(5.0),), np.ones((1, 1)))
+    times, tys = spec.sample(3, 1200)
+    from repro.faults import degrade
+    sc = FaultScenario(events=degrade(0, 10.0, 0.02, 60.0),
+                       hedge_quantile=0.9, hedge_min_obs=32)
+    pol = get_policy("grin")
+    mix1 = np.array([4])
+    tgt = np.asarray(pol.solve_target(mu, mix1))
+    host = ClosedNetworkSimulator(open_sim_config(
+        mu, spec, n_arrivals=1200, warmup_arrivals=100, queue_capacity=8,
+        distribution=DIST, seed=3, target_mix=mix1, faults=sc)).run(pol)
+    fb = build_fault_batch([sc], mu[None], tgt[None], seeds=[3], mode="open",
+                          policies=pol, mixes=mix1, n_arrivals=1200)
+    dev = simulate_open_batch(mu[None], tgt[None], times[None], tys[None],
+                              [3], distribution=DIST, queue_capacity=8,
+                              order="PS", warmup_arrivals=100, faults=fb)
+    hg, dg = host.goodput, float(dev["goodput"][0])
+    assert abs(dg - hg) / hg < 0.10
+    # both engines launched backups: wasted work is non-zero on both sides
+    assert host.spec_hedges > 0
+    assert host.wasted_work > 0.0 and float(dev["wasted_work"][0]) > 0.0
+
+
+def test_hist_quantile_rows_jax_matches_host_rule():
+    pytest.importorskip("jax")
+    hist = LogHistogram()
+    rng = np.random.default_rng(4)
+    rows = []
+    for _ in range(6):
+        x = rng.lognormal(mean=-1.0, sigma=1.2, size=rng.integers(40, 400))
+        rows.append(hist.counts(x))
+    counts = np.stack(rows).astype(np.float64)
+    for q in (0.5, 0.9, 0.95, 0.99):
+        dev = np.asarray(hist_quantile_rows_jax(counts, q, hist.lo,
+                                                hist.log_growth))
+        host = np.asarray([hist.quantile(r, q) for r in counts])
+        np.testing.assert_allclose(dev, host, rtol=1e-6)
