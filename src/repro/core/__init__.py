@@ -6,7 +6,7 @@ from repro.core.affinity import (AffinityCase, PowerModel, CONSTANT_POWER,
                                  PROPORTIONAL_POWER, classify_2x2,
                                  random_affinity_matrix, validate_affinity_2x2)
 from repro.core.cab import CABSolution, cab_closed_form_x, cab_solve, cab_target_state
-from repro.core.energy import (edp, edp_batch_jax, expected_delay,
+from repro.core.energy import (DVFSModel, edp, edp_batch_jax, expected_delay,
                                expected_delay_batch_jax,
                                expected_energy_batch_jax,
                                expected_energy_per_task, power_matrix_jax,

@@ -320,3 +320,35 @@ def make_storm(l: int, *, n_bursts: int = 1, group_size: int = 2,
         events.append(PoolEvent(tb, p, float(scale)))
         events.append(PoolEvent(te, p, 1.0))
     return tuple(events)
+
+
+def compose_event_streams(primary: tuple, secondary: tuple, l: int) -> tuple:
+    """Multiplicative composition of two per-pool scale schedules.
+
+    Each stream is a ``PoolEvent`` tuple defining a piecewise-constant
+    schedule starting at scale 1.0; the composed schedule is their
+    per-pool PRODUCT, emitted as events only where the product changes
+    (so the result always passes ``realize`` validation). This is how an
+    autoscaler's decision trace (DVFS steps, parks) coexists with a
+    hazard availability draw: a crash zeroes a downclocked pool, and
+    recovery restores it at the governor's frequency — not nominal.
+    """
+    out: list[PoolEvent] = []
+    for j in range(l):
+        a = sorted((e.time, e.scale) for e in primary if e.pool == j)
+        b = sorted((e.time, e.scale) for e in secondary if e.pool == j)
+        sa = sb = cur = 1.0
+        ia = ib = 0
+        for t in sorted({t for t, _ in a} | {t for t, _ in b}):
+            while ia < len(a) and a[ia][0] <= t:
+                sa = a[ia][1]
+                ia += 1
+            while ib < len(b) and b[ib][0] <= t:
+                sb = b[ib][1]
+                ib += 1
+            prod = sa * sb
+            if prod != cur:
+                out.append(PoolEvent(t, j, prod))
+                cur = prod
+    out.sort(key=lambda e: (e.time, e.pool))
+    return tuple(out)

@@ -610,6 +610,8 @@ class SchedulerCore:
                     f"{self.policy.name} requires exactly "
                     f"{self.policy.pool_limit} pools; got {mu.shape[1]}")
             self._set_mu(mu)
+            self.nominal_mu = self.mu.copy()   # the f=1 DVFS baseline
+            self._freq = np.ones(self.l)
         else:
             self._set_mu(self.base_mu.copy())  # drop EWMA folding: to nominal
         self.base_mu = self.mu.copy()
@@ -1027,7 +1029,28 @@ class SchedulerCore:
             if self.policy.needs_target:
                 self._maybe_refresh_rates()
 
-    # ---------------- stragglers / elastic ----------------
+    # ---------------- stragglers / elastic / DVFS ----------------
+    @property
+    def frequencies(self) -> np.ndarray:
+        """(l,) current per-pool DVFS scale (1.0 = nominal)."""
+        return self._freq.copy()
+
+    def set_frequencies(self, f) -> None:
+        """Per-pool DVFS rescale: effective rates become f_j * nominal mu
+        (alpha-power model, mu ∝ f). Routed through `_set_mu`, so the mu
+        version token bumps and a warm cache can never serve a target
+        solved at stale frequencies. Accumulated EWMA straggler folding is
+        dropped to the new operating point (it re-converges from live
+        completions). Frequencies must be positive: parking a pool is a
+        `pool_lost` topology event, not a frequency."""
+        f = np.asarray(f, dtype=np.float64)
+        if f.shape != (self.l,) or not np.isfinite(f).all() or (f <= 0).any():
+            raise ValueError(f"need ({self.l},) positive finite "
+                             f"frequencies; got {f!r}")
+        self._freq = f.copy()
+        self.base_mu = self.nominal_mu * f[None, :]
+        self._set_mu(self.base_mu.copy())
+
     def _maybe_refresh_rates(self) -> None:
         """Fold observed slowdowns into mu; targets re-solve lazily because
         the cache key includes the mu version token."""
@@ -1042,6 +1065,8 @@ class SchedulerCore:
         In-flight tasks on the pool are the caller's to re-enqueue."""
         self._set_mu(np.delete(self.mu, pool, axis=1))
         self.base_mu = np.delete(self.base_mu, pool, axis=1)
+        self.nominal_mu = np.delete(self.nominal_mu, pool, axis=1)
+        self._freq = np.delete(self._freq, pool)
         # rebuild-and-swap keeps the row lists rectangular at every instant
         # (unlocked snapshot readers must never observe ragged rows)
         self._counts_rows = [row[:pool] + row[pool + 1:]
@@ -1054,11 +1079,19 @@ class SchedulerCore:
         if self.refresh_on_topology:
             self.policy.repin_target(self.mu, lost=pool)
 
-    def pool_added(self, mu_column: np.ndarray) -> None:
+    def pool_added(self, mu_column: np.ndarray,
+                   frequency: float = 1.0) -> None:
+        """Elastic: a pool joined with NOMINAL rates `mu_column`, optionally
+        entering at a non-unit DVFS `frequency` (effective rates scale)."""
+        if not (np.isfinite(frequency) and frequency > 0):
+            raise ValueError(f"frequency must be positive; got {frequency!r}")
         mu_column = np.asarray(mu_column, dtype=np.float64)
-        self._set_mu(np.concatenate([self.mu, mu_column[:, None]], axis=1))
-        self.base_mu = np.concatenate([self.base_mu, mu_column[:, None]],
-                                      axis=1)
+        eff = mu_column * frequency
+        self._set_mu(np.concatenate([self.mu, eff[:, None]], axis=1))
+        self.base_mu = np.concatenate([self.base_mu, eff[:, None]], axis=1)
+        self.nominal_mu = np.concatenate(
+            [self.nominal_mu, mu_column[:, None]], axis=1)
+        self._freq = np.append(self._freq, float(frequency))
         self._counts_rows = [row + [0] for row in self._counts_rows]
         self._backlog = self._backlog + [0.0]
         self._targets.clear()

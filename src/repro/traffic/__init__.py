@@ -29,6 +29,7 @@ both engines:
 from repro.traffic.arrivals import (ArrivalProcess, DiurnalArrivals,
                                     MMPPArrivals, PoissonArrivals,
                                     TraceArrivals, TrafficSpec, load_trace)
+from repro.traffic.loadgen import flash_crowd_times, make_load_traces
 from repro.traffic.quantiles import LogHistogram, exact_quantiles
 from repro.traffic.admission import (AdmissionController, SLOClass,
                                      default_admit_limits)

@@ -1,31 +1,88 @@
 """Optional-hypothesis shim: `from _prop import given, settings, st`
 (tests/ is not a package; pytest's rootdir insertion puts it on sys.path).
 
-With hypothesis installed this re-exports the real API; without it, @given
-marks the test skipped (property tests are extras, the deterministic suite
-must still run) and `st` strategies become inert placeholders.
+With hypothesis installed this re-exports the real API.  Without it, a
+deterministic mini property runner stands in: each @given test runs
+`max_examples` seeded draws (default 25) from a per-test substream of
+`np.random.default_rng`, so property tests still execute — with fixed,
+reproducible examples rather than shrinking search — instead of skipping.
+Failures re-raise with the falsifying example attached.
 """
 try:
     from hypothesis import given, settings, strategies as st  # noqa: F401
     HAVE_HYPOTHESIS = True
 except ModuleNotFoundError:
-    import pytest
+    import functools
+    import zlib
+
+    import numpy as np
 
     HAVE_HYPOTHESIS = False
 
-    def given(*_args, **_kwargs):
-        def deco(fn):
-            return pytest.mark.skip(reason="hypothesis not installed "
-                                           "(pip install -e .[test])")(fn)
-        return deco
+    _DEFAULT_EXAMPLES = 25
+    _FALLBACK_SEED = 0x5EED
 
-    def settings(*_args, **_kwargs):
+    class _Strategy:
+        """A draw function over a numpy Generator (no shrinking)."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kwargs):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+        @staticmethod
+        def sampled_from(elements):
+            items = list(elements)
+            return _Strategy(lambda rng: items[int(rng.integers(len(items)))])
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda rng: tuple(s.draw(rng) for s in strategies))
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_kwargs):
         def deco(fn):
+            fn._prop_max_examples = max_examples
             return fn
         return deco
 
-    class _InertStrategies:
-        def __getattr__(self, _name):
-            return lambda *a, **k: None
+    def given(*strategies):
+        def deco(fn):
+            n_examples = getattr(fn, "_prop_max_examples", _DEFAULT_EXAMPLES)
 
-    st = _InertStrategies()
+            @functools.wraps(fn)
+            def wrapper():
+                # crc32 (not hash()) so the stream survives PYTHONHASHSEED.
+                rng = np.random.default_rng(
+                    [_FALLBACK_SEED, zlib.crc32(fn.__qualname__.encode())])
+                for i in range(n_examples):
+                    args = tuple(s.draw(rng) for s in strategies)
+                    try:
+                        fn(*args)
+                    except Exception as exc:
+                        raise AssertionError(
+                            f"falsifying example {i + 1}/{n_examples}: "
+                            f"{fn.__name__}{args!r}") from exc
+            # pytest resolves fixtures through __wrapped__'s signature;
+            # the wrapper takes none, so drop the introspection link.
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

@@ -415,3 +415,90 @@ def test_open_hazard_conformance_with_quantile_hedging():
             rows.append((g_rel, w_rel, d_abs))
     g, w, _ = np.asarray(rows).T
     assert g.mean() < 0.05 and w.mean() < 0.25, rows
+
+
+# ---------------------------------------------------------------------------
+# Autoscale decision-trace conformance: a DVFS governor watches a recorded
+# diurnal arrival realization offline, its decision trace is lowered onto the
+# PR 7 fault fabric (PoolEvent scale = frequency, 0 = park), and BOTH engines
+# replay the SAME (arrival realization x mu schedule) — goodput, E/task, and
+# drop fractions must agree at the fault-cell gates, with topology
+# breakpoints matching exactly. This pins the controller <-> engine contract:
+# whatever the governor decides is bit-identically the schedule both engines
+# execute.
+# ---------------------------------------------------------------------------
+from repro.core import DVFSModel  # noqa: E402
+from repro.sched.autoscale import (AutoscaleGovernor,  # noqa: E402
+                                   GovernorConfig, decisions_to_events)
+from repro.traffic import DiurnalArrivals  # noqa: E402
+
+
+def test_autoscale_trace_conformance_goodput_energy_drops():
+    pol = GrInPriorityPolicy((2.0, 1.0))
+    dist = make_distribution("exponential")
+    dvfs = DVFSModel(alpha=3.0, levels=(0.5, 0.75, 1.0))
+    n_epochs = 24
+    rows = []
+    for mi in range(len(OMUS)):
+        mu = OMUS[mi]
+        lam = [0.7 * mu[c].max() for c in range(2)]
+        period = O_T / sum(lam) / 2.0        # ~two day/night cycles
+        spec = TrafficSpec(
+            (DiurnalArrivals(base=lam[0], amplitude=0.9, period=period),
+             DiurnalArrivals(base=lam[1], amplitude=0.9, period=period)),
+            np.eye(2))
+        mix = derive_target_mix(spec, mu.shape[1], O_QCAP)
+        tgt = np.asarray(pol.solve_target(mu, mix))
+        for s in OSEEDS:
+            times, tys = spec.sample(s, O_T)
+            te = float(times[-1])
+            gov = AutoscaleGovernor(
+                mu, dvfs=dvfs,
+                config=GovernorConfig(epoch=te / n_epochs, hysteresis=0.0))
+            edges = np.linspace(0.0, te, n_epochs + 1)
+            for e in range(n_epochs):
+                win = (times >= edges[e]) & (times < edges[e + 1])
+                gov.observe(np.bincount(tys[win], minlength=2),
+                            float(edges[e + 1] - edges[e]))
+                if edges[e + 1] < 0.95 * te:   # keep events in-horizon
+                    gov.decide(now=float(edges[e + 1]))
+            events = decisions_to_events(gov.decisions, mu.shape[1])
+            assert events, (mi, s)  # the deep swing forced real actions
+            sc = FaultScenario(events=events, refresh_targets=True)
+            cfg = open_sim_config(mu, spec, n_arrivals=O_T,
+                                  warmup_arrivals=O_WARM,
+                                  queue_capacity=O_QCAP, class_of_type=O_CLS,
+                                  target_mix=mix, distribution=dist,
+                                  order="PS", seed=s, power=POWER, faults=sc)
+            host = ClosedNetworkSimulator(cfg).run(pol)
+            fb = build_fault_batch([sc], mu[None], tgt[None], seeds=[s],
+                                   mode="open", policies=pol, mixes=mix,
+                                   n_arrivals=O_T, n_classes=2)
+            dev = simulate_open_batch(
+                mu[None], tgt[None], times[None], tys[None], [s],
+                distribution=dist, queue_capacity=O_QCAP, order="PS",
+                warmup_arrivals=O_WARM, class_of_type=O_CLS, power=POWER,
+                modes=np.full(1, MODE_DEFICIT, np.int32), faults=fb)
+            # same realized mu schedule: breakpoints must match exactly
+            assert host.topology_events == int(dev["topology_events"][0]) > 0
+            g_rel = (abs(float(dev["goodput"][0]) - host.goodput)
+                     / host.goodput)
+            e_rel = (abs(float(dev["mean_energy"][0]) - host.mean_energy)
+                     / host.mean_energy)
+            d_abs = (abs(host.dropped - float(dev["dropped"][0]))
+                     / (O_T - O_WARM))
+            assert g_rel < F_X_TOL, (mi, s, host.goodput,
+                                     float(dev["goodput"][0]))
+            assert e_rel < F_X_TOL, (mi, s, host.mean_energy,
+                                     float(dev["mean_energy"][0]))
+            assert d_abs < F_DROP_ABS, (mi, s, host.dropped,
+                                        int(dev["dropped"][0]))
+            # parks strand in-flight work; gate only when the stranding is
+            # material (near-zero denominators make rel noise meaningless)
+            hw, dw = host.wasted_work, float(dev["wasted_work"][0])
+            if max(hw, dw) > 0.05:
+                assert abs(dw - hw) / max(hw, dw) < F_WASTE_TOL, \
+                    (mi, s, hw, dw)
+            rows.append((g_rel, e_rel, d_abs))
+    g, e, _ = np.asarray(rows).T
+    assert g.mean() < 0.05 and e.mean() < 0.05, rows
