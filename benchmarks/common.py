@@ -1,4 +1,12 @@
-"""Shared benchmark plumbing: CSV rows `name,us_per_call,derived` + JSON dump."""
+"""Shared benchmark plumbing: CSV rows `name,us_per_call,derived` + JSON dump.
+
+Every `save_json` payload that is a dict gets a machine-readable `meta`
+block (`repro.obs.meta.run_meta`): jax backend and version, Pallas kernel
+mode (compiled / interpret / jnp-reference), dtype, python/platform. A
+BENCH_*.json number is meaningless without knowing what substrate produced
+it; `tools/bench_compare.py` refuses to compare runs whose kernel modes
+differ.
+"""
 from __future__ import annotations
 
 import json
@@ -13,6 +21,9 @@ def emit(name: str, us_per_call: float, derived: str):
 
 
 def save_json(name: str, payload):
+    if isinstance(payload, dict) and "meta" not in payload:
+        from repro.obs.meta import run_meta
+        payload = {**payload, "meta": run_meta()}
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
         json.dump(payload, f, indent=1, default=str)

@@ -464,5 +464,7 @@ def grin_solve_batch_jax(mu, n_tasks_batch, *, n_sizes: int | None = None,
     if use_kernel is None:
         from repro.kernels.grin_moves import _interpret, _use_pallas
         use_kernel = _use_pallas() or _interpret()
-    return _grin_block_core(mus, mixes, Ps, int(n_sizes), max_moves,
-                            bool(use_kernel), obj)
+    from repro.obs.profile import span as _obs_span
+    with _obs_span("grin_solve_batch_jax") as sp:
+        return sp.ready(_grin_block_core(mus, mixes, Ps, int(n_sizes),
+                                         max_moves, bool(use_kernel), obj))

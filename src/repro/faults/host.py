@@ -353,6 +353,11 @@ def run_open_faults(sim, core, return_samples: bool = False):
                     rec_on = True
                     rec_pre = n_sys
                     rec_t0 = now
+                if core.recorder is not None:
+                    core.recorder.record(
+                        "faults", "breakpoint", t=now, segment=sp,
+                        crashed=crashed, in_system=n_sys,
+                        scales=[float(s) for s in sc])
             spec_hedge()
             continue
 
@@ -714,6 +719,11 @@ def run_closed_faults(sim, core):
                 n_topo += 1
                 rr_pend_sum += now
                 rr_pend_n += 1
+                if core.recorder is not None:
+                    core.recorder.record(
+                        "faults", "breakpoint", t=now, segment=sp,
+                        crashed=crashed,
+                        scales=[float(s) for s in sc])
             continue
 
         # ---- completion attempt on processor j ----

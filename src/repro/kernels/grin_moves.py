@@ -339,6 +339,16 @@ def block_move_scores(N, mu, sizes, *, use_kernel: bool | None = None,
     if use_kernel is None:
         use_kernel = _use_pallas() or _interpret()
     if use_kernel:
+        import jax.core as jcore
+        from repro.obs.profile import span as _obs_span
+        # span only at the host level: under a jit trace (abstract N) a
+        # wall-clock pair would time tracing, not the kernel
+        if not isinstance(N, jcore.Tracer):
+            with _obs_span("pallas_gain_kernel") as sp:
+                return sp.ready(block_move_gains_pallas(
+                    N, mu, sizes,
+                    interpret=_interpret() or not _use_pallas(),
+                    return_gains=return_gains, P=P, objective=objective))
         return block_move_gains_pallas(
             N, mu, sizes, interpret=_interpret() or not _use_pallas(),
             return_gains=return_gains, P=P, objective=objective)

@@ -40,6 +40,10 @@ def main() -> None:
     ap.add_argument("--load", type=float, default=1.2,
                     help="offered load as a fraction of measured capacity "
                          "(--traffic; >1 = overload)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace of scheduler + admission "
+                         "decisions here (--traffic; open in Perfetto or "
+                         "summarize with tools/trace_view.py)")
     args = ap.parse_args()
 
     cfg = smoke_config(get_arch(args.arch))
@@ -106,7 +110,11 @@ def main() -> None:
         x_knee = 1.0 / max(shares[c] / mu[c].max() for c in range(2))
         times = times * (trace_rate / (args.load * x_knee))
         qcap = 6
-        core = SchedulerCore(GrInPriorityPolicy((2.0, 1.0)), mu)
+        rec = None
+        if args.trace_out:
+            from repro.obs import TraceRecorder
+            rec = TraceRecorder()
+        core = SchedulerCore(GrInPriorityPolicy((2.0, 1.0)), mu, recorder=rec)
         # SLOs: protect the interactive prefill class at its own service
         # plus 1.5x a worst-case head-of-line decode block (pools are FCFS);
         # the decode class is best-effort
@@ -117,6 +125,10 @@ def main() -> None:
                                   queue_capacity=qcap, window=64,
                                   adapt_every=8)
         m = replay_open(vc, adm, times, classes, warmup=len(times) // 10)
+        if rec is not None:
+            n = rec.export(args.trace_out)
+            print(f"[serve] wrote {n} trace events to {args.trace_out} "
+                  f"({rec.dropped} dropped)")
         print(f"[serve] GrIn-P + admission @ load {args.load:.2f}: "
               f"goodput {m.throughput:.2f} req/s")
         for c, name in enumerate(("prefill", "decode")):

@@ -1,0 +1,33 @@
+"""Flight-recorder observability layer (`repro.obs`).
+
+Three instruments, all opt-in and zero-cost when disabled:
+
+  * `TraceRecorder` — a bounded ring buffer of structured decision events
+    (routing, target re-solves with cache hit/miss/eviction, admission
+    shed/defer, governor decisions, fault breakpoints), exportable to
+    Chrome trace-event JSON (chrome://tracing, Perfetto, `tools/
+    trace_view.py`). Attach one to a `SchedulerCore` / `AdmissionController`
+    / `AutoscaleGovernor`; with none attached the hot paths skip a single
+    `is not None` check.
+  * Profiling spans (`repro.obs.profile`) — `block_until_ready`-aware
+    wall-clock spans around the hot solver entry points
+    (`solve_targets_grid_jax`, `grin_solve_batch_jax`, `route_many`, the
+    Pallas gain kernel). Off by default (`enable_profiling()`).
+  * Time-resolved telemetry (`repro.obs.telemetry`) — fixed-bin device
+    time series (per-pool occupancy, backlog, power, in-flight hedges)
+    carried through the `lax.scan` engine cores, with a host twin in the
+    oracle loops. Telemetry off is a trace-time static: the compiled
+    program (and every result) is unchanged.
+
+`run_meta()` (`repro.obs.meta`) stamps benchmark payloads with the jax
+backend, kernel mode and dtype so perf numbers stay attributable.
+"""
+from repro.obs.meta import run_meta
+from repro.obs.profile import (Profiler, enable_profiling, get_profiler,
+                               profile_block, span)
+from repro.obs.recorder import TraceEvent, TraceRecorder
+from repro.obs.telemetry import TelemetryAccumulator, telemetry_series
+
+__all__ = ["TraceRecorder", "TraceEvent", "Profiler", "span",
+           "enable_profiling", "get_profiler", "profile_block", "run_meta",
+           "TelemetryAccumulator", "telemetry_series"]

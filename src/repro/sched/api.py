@@ -42,11 +42,15 @@ jit-compiled largest-deficit kernel for fleet-scale dispatch rates.
 from __future__ import annotations
 
 import dataclasses
+import time
+import warnings
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+from repro.obs.profile import span as _obs_span
 
 from repro.core.affinity import PROPORTIONAL_POWER, PowerModel
 from repro.core.cab import cab_target_state
@@ -441,16 +445,18 @@ def solve_targets_jax(mu, n_tasks_batch, solver: str = "block",
     if mixes.ndim != 2 or mixes.shape[1] != mu.shape[0]:
         raise ValueError(f"n_tasks_batch must be (B, k={mu.shape[0]}); got "
                          f"{tuple(mixes.shape)}")
-    if solver == "block":
-        targets, xs, _, _ = grin_solve_batch_jax(mu, mixes_np,
-                                                 objective=objective,
-                                                 power=power, P=P)
-    elif solver == "single":
-        if objective != "max-x":
-            raise ValueError("energy objectives need solver='block'")
-        targets, xs = _solve_targets_single_jax(mu, mixes)
-    else:
-        raise ValueError(f"unknown solver {solver!r}: block | single")
+    with _obs_span("solve_targets_jax") as sp:
+        if solver == "block":
+            targets, xs, _, _ = grin_solve_batch_jax(mu, mixes_np,
+                                                     objective=objective,
+                                                     power=power, P=P)
+        elif solver == "single":
+            if objective != "max-x":
+                raise ValueError("energy objectives need solver='block'")
+            targets, xs = _solve_targets_single_jax(mu, mixes)
+        else:
+            raise ValueError(f"unknown solver {solver!r}: block | single")
+        targets, xs = sp.ready((targets, xs))
     return _repair_targets(np.asarray(targets), mixes_np), np.asarray(xs)
 
 
@@ -480,19 +486,21 @@ def solve_targets_grid_jax(mus, mixes, solver: str = "block",
     mix_b = np.tile(mixes, (G, 1))                      # (G*M, k)
     if P is not None and np.ndim(P) == 3:
         P = np.repeat(np.asarray(P), M, axis=0)         # align with mu_b
-    if solver == "block":
-        raw, xs, conv, _ = grin_solve_batch_jax(mu_b, mix_b,
-                                                objective=objective,
-                                                power=power, P=P)
+    with _obs_span("solve_targets_grid_jax") as sp:
+        if solver == "block":
+            raw, xs, conv, _ = grin_solve_batch_jax(mu_b, mix_b,
+                                                    objective=objective,
+                                                    power=power, P=P)
+        elif solver == "single":
+            if objective != "max-x":
+                raise ValueError("energy objectives need solver='block'")
+            raw, xs, conv = _solve_targets_single_grid(
+                jnp.asarray(mu_b, jnp.float32),
+                jnp.asarray(mix_b, jnp.float32))
+        else:
+            raise ValueError(f"unknown solver {solver!r}: block | single")
+        raw, xs, conv = sp.ready((raw, xs, conv))
         conv = np.asarray(conv).reshape(G, M)
-    elif solver == "single":
-        if objective != "max-x":
-            raise ValueError("energy objectives need solver='block'")
-        raw, xs, conv = _solve_targets_single_grid(
-            jnp.asarray(mu_b, jnp.float32), jnp.asarray(mix_b, jnp.float32))
-        conv = np.asarray(conv).reshape(G, M)
-    else:
-        raise ValueError(f"unknown solver {solver!r}: block | single")
     targets = _repair_targets(np.asarray(raw), mix_b).reshape(G, M, k, l)
     return targets, np.asarray(xs).reshape(G, M), conv
 
@@ -576,7 +584,9 @@ class SchedulerCore:
     def __init__(self, policy: str | Policy, mu: np.ndarray, *,
                  rate_alpha: float = 0.3,
                  resolve_rate_rel_change: float = 0.25, seed: int = 0,
-                 refresh_on_topology: bool = False):
+                 refresh_on_topology: bool = False,
+                 cache_capacity: int | None = None,
+                 recorder=None):
         self.policy = get_policy(policy)
         self._rate_alpha = rate_alpha
         self._resolve_threshold = resolve_rate_rel_change
@@ -584,6 +594,16 @@ class SchedulerCore:
         # Opt-in: pool_lost/pool_added repin the policy's pinned target to
         # the new pool set instead of leaving it to raise on the next route.
         self.refresh_on_topology = refresh_on_topology
+        if cache_capacity is None:
+            cache_capacity = _CACHE_CAP     # read at call time (patchable)
+        if cache_capacity < 1:
+            raise ValueError(f"cache_capacity must be >= 1; "
+                             f"got {cache_capacity}")
+        self._cache_cap = int(cache_capacity)
+        # Optional flight recorder (repro.obs.TraceRecorder): hot paths pay
+        # one `is not None` check when unattached. Survives reset() — the
+        # recorder's lifetime is the driver's, not the run's.
+        self.recorder = recorder
         self.reset(mu)
 
     # ---------------- lifecycle ----------------
@@ -623,6 +643,12 @@ class SchedulerCore:
         self._mix: np.ndarray | None = None
         self._mix_key: tuple | None = None
         self.resolves = 0
+        # target-cache statistics (`stats` snapshot; repro.obs satellite)
+        self._cache_hits = 0
+        self._cache_misses = 0
+        self._cache_evictions = 0
+        self._solve_time_s = 0.0
+        self._churn_warned = False
         if n_tasks is not None:
             self.notify_type_counts(n_tasks)
         return self
@@ -644,11 +670,43 @@ class SchedulerCore:
         return np.asarray(self._backlog, dtype=np.float64)
 
     # ---------------- target maintenance ----------------
+    @property
+    def stats(self) -> dict:
+        """Target-cache + solve statistics snapshot: hits/misses count
+        `_target_for` lookups, evictions count FIFO displacement (the churn
+        signal: a working set larger than `cache_capacity`), solve_time_s
+        is the cumulative host wall-clock spent inside
+        `policy.solve_target`."""
+        return {"cache_hits": self._cache_hits,
+                "cache_misses": self._cache_misses,
+                "cache_evictions": self._cache_evictions,
+                "cache_size": len(self._targets),
+                "cache_capacity": self._cache_cap,
+                "resolves": self.resolves,
+                "solve_time_s": self._solve_time_s}
+
     def _cache_put(self, key: tuple, target: np.ndarray) -> None:
-        if len(self._targets) >= _CACHE_CAP:
+        if len(self._targets) >= self._cache_cap:
             # FIFO: evict the single oldest entry (dicts preserve insertion
             # order) rather than wiping the whole cache.
-            self._targets.pop(next(iter(self._targets)))
+            evicted = next(iter(self._targets))
+            self._targets.pop(evicted)
+            self._cache_evictions += 1
+            if self.recorder is not None:
+                self.recorder.record("sched", "cache_evict",
+                                     key=repr(evicted))
+            if (not self._churn_warned
+                    and self._cache_evictions >= self._cache_cap):
+                # a full capacity of evictions means the working set cycled
+                # through the whole cache at least once: every later lookup
+                # is likely a miss and targets re-solve continuously
+                self._churn_warned = True
+                warnings.warn(
+                    f"{self.policy.name} target cache is churning: "
+                    f"{self._cache_evictions} FIFO evictions at capacity "
+                    f"{self._cache_cap} — the mix/mu working set exceeds "
+                    "the cache; raise SchedulerCore(cache_capacity=...) or "
+                    "narrow the sweep", RuntimeWarning, stacklevel=3)
         self._targets[key] = target
 
     def _weights_key(self) -> tuple | None:
@@ -679,7 +737,10 @@ class SchedulerCore:
                 else key_hint), self._mu_token, self._weights_key())
         hit = self._targets.get(key)
         if hit is None:
+            self._cache_misses += 1
+            t0 = time.perf_counter()
             hit = np.asarray(self.policy.solve_target(self.mu, np.asarray(n_tasks)))
+            self._solve_time_s += time.perf_counter() - t0
             if hit.shape != (self.k, self.l):
                 raise ValueError(
                     f"{self.policy.name} target shape {hit.shape} does not "
@@ -687,6 +748,14 @@ class SchedulerCore:
                     "targets must be re-pinned after pool_lost/pool_added)")
             self._cache_put(key, hit)
             self.resolves += 1
+            if self.recorder is not None:
+                self.recorder.record("sched", "resolve", hit=False,
+                                     mix=key[0], mu_token=key[1])
+        else:
+            self._cache_hits += 1
+            if self.recorder is not None:
+                self.recorder.record("sched", "resolve", hit=True,
+                                     mix=key[0], mu_token=key[1])
         return hit
 
     def notify_type_counts(self, n_tasks: np.ndarray) -> None:
@@ -875,6 +944,11 @@ class SchedulerCore:
                     d = trow[jj] - crow[jj]
                     if d > best_d or (d == best_d and mrow[jj] > best_m):
                         best_d, best_m, j = d, mrow[jj], jj
+                if self.recorder is not None:
+                    self.recorder.record(
+                        "sched", "route", type=task_type, pool=j,
+                        deficit=[trow[jj] - crow[jj]
+                                 for jj in range(self.l)])
             else:
                 counts = view.counts if view is not None else self.counts
                 if self._mix is not None:
@@ -887,10 +961,16 @@ class SchedulerCore:
                 deficit = target[task_type] - counts[task_type]
                 best = np.flatnonzero(deficit == deficit.max())
                 j = int(best[np.argmax(self.mu[task_type][best])])
+                if self.recorder is not None:
+                    self.recorder.record("sched", "route", type=task_type,
+                                         pool=j, deficit=deficit.tolist())
         else:
             j = int(self.policy.choose(
                 task_type, view if view is not None else self._internal_view(),
                 rng if rng is not None else self._rng))
+            if self.recorder is not None:
+                self.recorder.record("sched", "route", type=task_type,
+                                     pool=j, policy=self.policy.key)
         self._counts_rows[task_type][j] += 1
         self._backlog[j] += self._inv_mu_rows[task_type][j]
         return j
@@ -948,6 +1028,9 @@ class SchedulerCore:
                 opts = np.flatnonzero(ok)
                 r = rng if rng is not None else self._rng
                 j = int(opts[r.integers(len(opts))])
+        if self.recorder is not None:
+            self.recorder.record("sched", "route_backup", type=task_type,
+                                 pool=j, exclude=exclude)
         self._counts_rows[task_type][j] += 1
         self._backlog[j] += self._inv_mu_rows[task_type][j]
         return j
@@ -977,11 +1060,17 @@ class SchedulerCore:
         padded[:m] = types
         valid = np.zeros(cap, dtype=bool)
         valid[:m] = True
-        counts, js = _route_many_kernel(
-            jnp.asarray(target, dtype=jnp.int32),
-            jnp.asarray(self._ranks), jnp.asarray(self.counts, jnp.int32),
-            jnp.asarray(padded), jnp.asarray(valid))
+        with _obs_span("route_many") as sp:
+            counts, js = sp.ready(_route_many_kernel(
+                jnp.asarray(target, dtype=jnp.int32),
+                jnp.asarray(self._ranks),
+                jnp.asarray(self.counts, jnp.int32),
+                jnp.asarray(padded), jnp.asarray(valid)))
         js = np.asarray(js[:m]).astype(np.int64)
+        if self.recorder is not None:
+            self.recorder.record(
+                "sched", "route_many", n=m,
+                pools=np.bincount(js, minlength=self.l).tolist())
         self._counts_rows = np.asarray(counts).astype(np.int64).tolist()
         backlog = self.backlog_work
         # np.add.at applies in arrival order: bit-equal to sequential route().
@@ -1013,6 +1102,9 @@ class SchedulerCore:
         self._counts_rows[task_type][pool] -= 1
         b = self._backlog[pool] - self._inv_mu_rows[task_type][pool]
         self._backlog[pool] = b if b > 0.0 else 0.0
+        if self.recorder is not None:
+            self.recorder.record("sched", "unroute", type=task_type,
+                                 pool=pool)
 
     def complete(self, task_type: int, pool: int,
                  service_s: float | None = None) -> None:

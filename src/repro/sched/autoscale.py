@@ -381,6 +381,16 @@ class AutoscaleGovernor:
                        n_candidates=len(freq_grid))
         self.freqs = chosen.copy()
         self.decisions.append(dec)
+        rec = getattr(self.core, "recorder", None) if self.core is not None \
+            else None
+        if rec is not None:
+            rec.record("governor", "decision", t=float(now),
+                       action=action, freqs=chosen.tolist(),
+                       x_cap=dec.x_cap, energy_per_task=dec.energy_per_task,
+                       power_pred=dec.power_pred,
+                       power_cap=bud.power_cap,
+                       energy_per_task_cap=bud.energy_per_task_cap,
+                       lam_hat=lam_hat, n_candidates=dec.n_candidates)
         return dec
 
     def decide_signals(self, signals: dict) -> np.ndarray:

@@ -126,11 +126,13 @@ def _expected_mix(probs: np.ndarray, n: int) -> np.ndarray:
 @functools.partial(jax.jit, static_argnames=("order", "dist_specs",
                                              "n_steps", "warmup", "cls_of",
                                              "has_mix", "has_faults",
-                                             "n_faults", "n_target"))
+                                             "n_faults", "n_target",
+                                             "telemetry_bins"))
 def _simulate_fleet(mu, P, target, rank, types0, keys, modes, mix_probs,
                     f_times, f_scale, seg_tgt, period, c_age, overhead,
-                    fail_p, fail_capv, *, order, dist_specs, n_steps, warmup,
-                    cls_of, has_mix, has_faults, n_faults, n_target):
+                    fail_p, fail_capv, tel_h, *, order, dist_specs, n_steps,
+                    warmup, cls_of, has_mix, has_faults, n_faults, n_target,
+                    telemetry_bins=0):
     """vmapped scan core. All array args carry a leading batch axis B:
     mu/P/target/rank (B, k, l), types0 (B, n), keys (B, 2), modes (B,),
     mix_probs (B, k). `cls_of` is the static (k,) type -> class map and
@@ -144,12 +146,20 @@ def _simulate_fleet(mu, P, target, rank, types0, keys, modes, mix_probs,
     scan budget; the run freezes after `n_target` successful completions
     (a completion counter replaces the scan index for window bookkeeping).
     With has_faults=False every fault branch is dropped at trace time and
-    the compiled program — and its results — are unchanged."""
+    the compiled program — and its results — are unchanged.
+
+    Telemetry (`repro.obs`): telemetry_bins > 0 appends a time-resolved
+    carry — per-pool occupancy / backlog integrals (nb, l) and total power
+    (nb,) over nb equal bins of the caller-supplied horizon `tel_h` (B,);
+    each inter-event interval charges its dt (clipped at the horizon) to
+    the bin containing the interval START (the host TelemetryAccumulator
+    convention). telemetry_bins=0 (default) drops the stanza at trace
+    time, leaving the compiled program byte-identical."""
     samplers = [_size_sampler(s) for s in dist_specs]
     n_cls = max(cls_of) + 1
 
     def one(mu, P, target, rank, types0, key, mode, mix_p, f_times, f_scale,
-            seg_tgt, period, c_age, overhead, fail_p, fail_capv):
+            seg_tgt, period, c_age, overhead, fail_p, fail_capv, tel_h):
         k, l = mu.shape
         n = types0.shape[0]
         order_ps = order == "PS"
@@ -222,17 +232,25 @@ def _simulate_fleet(mu, P, target, rank, types0, keys, modes, mix_probs,
                       jnp.float32(0.0), jnp.int32(0))
         else:
             fstate = ()
+        if telemetry_bins:
+            tstate = (jnp.zeros((telemetry_bins, l), jnp.float32),  # occ_t
+                      jnp.zeros((telemetry_bins, l), jnp.float32),  # bl_t
+                      jnp.zeros(telemetry_bins, jnp.float32),       # pw_t
+                      jnp.zeros(telemetry_bins, jnp.float32))       # hg_t
+        else:
+            tstate = ()
         state = (key, jnp.float32(0.0), proc0, need0, need0, sizes0,
                  jnp.zeros(n, jnp.float32), jnp.arange(n, dtype=jnp.int32),
                  counts0, jnp.float32(0.0),
                  jnp.zeros(n_cls, jnp.float32), jnp.zeros(n_cls, jnp.float32),
                  jnp.zeros(n_cls, jnp.float32), jnp.float32(0.0),
-                 jnp.zeros((k, l), jnp.float32), types0, run0, fstate)
+                 jnp.zeros((k, l), jnp.float32), types0, run0, fstate,
+                 tstate)
 
         def step(state, i):
             (key, now, proc, remaining, need, size_left, entry, stamp,
              counts, t_start, resp_c, energy_c, meas_c, sum_power, occ,
-             types, run_pid, fstate) = state
+             types, run_pid, fstate, tstate) = state
             if has_faults:
                 (sp, ncomp, fails_used, size0, wasted, failcnt, rrp_s,
                  rrp_n, rr_s, rr_n, topo) = fstate
@@ -291,6 +309,20 @@ def _simulate_fleet(mu, P, target, rank, types0, keys, modes, mix_probs,
                                jnp.where(do_comp, dt_c, 0.0))
             else:
                 dt = dtj[j_star]
+            if telemetry_bins:
+                # pre-event state charged over [now, now + dt) clipped at
+                # the horizon, into the bin holding the interval start (the
+                # host TelemetryAccumulator convention)
+                occ_t, bl_t, pw_t, hg_t = tstate
+                binw = jnp.maximum(tel_h, 1e-30) / telemetry_bins
+                w_t = jnp.clip(jnp.minimum(now + dt, tel_h) - now, 0.0, None)
+                b_t = jnp.clip((now / binw).astype(jnp.int32), 0,
+                               telemetry_bins - 1)
+                bl_pre = jnp.where(mask, size_left[:, None], 0.0).sum(0)
+                occ_t = occ_t.at[b_t].add(w_t * cntf)
+                bl_t = bl_t.at[b_t].add(w_t * bl_pre)
+                pw_t = pw_t.at[b_t].add(w_t * pw)
+                tstate = (occ_t, bl_t, pw_t, hg_t)
             now = now + dt
             if order_ps:
                 dep = (dt * sc[proc] / cntf[proc] if has_faults
@@ -475,12 +507,12 @@ def _simulate_fleet(mu, P, target, rank, types0, keys, modes, mix_probs,
                 fstate = ()
             return (key, now, proc, remaining, need, size_left, entry, stamp,
                     counts, t_start, resp_c, energy_c, meas_c, sum_power,
-                    occ, types, run_pid, fstate), None
+                    occ, types, run_pid, fstate, tstate), None
 
         state, _ = jax.lax.scan(step, state,
                                 jnp.arange(n_steps, dtype=jnp.int32))
         (_, now, _, _, _, _, _, _, _, t_start, resp_c, energy_c, meas_c,
-         sum_power, occ, _, _, fstate) = state
+         sum_power, occ, _, _, fstate, tstate) = state
         if has_faults:
             (_, ncomp, _, _, wasted, failcnt, _, _, rr_s, rr_n,
              topo) = fstate
@@ -493,19 +525,20 @@ def _simulate_fleet(mu, P, target, rank, types0, keys, modes, mix_probs,
                 elapsed, occ / elapsed, sum_power / elapsed, meas_c, resp_c,
                 energy_c)
         if has_faults:
-            return base + (wasted, failcnt, rr_s, rr_n, topo)
-        return base
+            base = base + (wasted, failcnt, rr_s, rr_n, topo)
+        return base + tstate
 
     return jax.vmap(one)(mu, P, target, rank, types0, keys, modes, mix_probs,
                          f_times, f_scale, seg_tgt, period, c_age, overhead,
-                         fail_p, fail_capv)
+                         fail_p, fail_capv, tel_h)
 
 
 def simulate_batch(mu, targets, types0, seeds, *, distribution, order="PS",
                    n_completions, warmup_completions,
                    power: PowerModel = PROPORTIONAL_POWER, modes=None,
                    class_of_type=None, class_distributions=None,
-                   type_mix=None, faults=None):
+                   type_mix=None, faults=None, telemetry_bins=0,
+                   telemetry_horizon=None):
     """Simulate B closed networks in one device call.
 
     mu: (k, l) shared or (B, k, l) per-point; targets: (B, k, l) pinned
@@ -534,6 +567,14 @@ def simulate_batch(mu, targets, types0, seeds, *, distribution, order="PS",
     there is no pre-crash level to recover to). Incompatible with
     `type_mix`. With faults=None the compiled program is the pre-fault
     one, byte for byte.
+
+    `telemetry_bins` > 0 (with `telemetry_horizon`, a scalar or (B,)
+    simulated-time horizon) adds res["telemetry"]: raw dt-weighted
+    integrals of per-pool occupancy / backlog (B, nb, l), total power and
+    hedges (B, nb; hedges are identically 0 in closed mode) over nb equal
+    bins of [0, horizon], plus bin_width / horizon (B,). Feed to
+    `repro.obs.telemetry_series` for per-bin time averages.
+    telemetry_bins=0 leaves the compiled program untouched.
     """
     targets = np.asarray(targets)
     B, k, l = targets.shape
@@ -610,16 +651,29 @@ def simulate_batch(mu, targets, types0, seeds, *, distribution, order="PS",
         f_over = jnp.zeros(B, jnp.float32)
         f_prob = jnp.zeros(B, jnp.float32)
         f_cap = jnp.zeros(B, jnp.int32)
+    if telemetry_bins < 0:
+        raise ValueError("telemetry_bins must be >= 0")
+    if telemetry_bins:
+        if telemetry_horizon is None:
+            raise ValueError("telemetry_bins > 0 needs telemetry_horizon "
+                             "(the closed engine has no arrival horizon)")
+        tel_h = np.broadcast_to(
+            np.asarray(telemetry_horizon, np.float64), (B,))
+        if (tel_h <= 0).any():
+            raise ValueError("telemetry_horizon must be > 0")
+    else:
+        tel_h = np.ones(B)
     out_dev = _simulate_fleet(
         jnp.asarray(mus, jnp.float32), jnp.asarray(P, jnp.float32),
         jnp.asarray(targets, jnp.int32), jnp.asarray(ranks), types0,
         jnp.asarray(keys), jnp.asarray(modes),
         jnp.asarray(mix_probs, jnp.float32), f_times, f_scale, seg_tgt,
-        f_period, f_age, f_over, f_prob, f_cap, order=order,
+        f_period, f_age, f_over, f_prob, f_cap,
+        jnp.asarray(tel_h, jnp.float32), order=order,
         dist_specs=dist_specs, n_steps=n_steps,
         warmup=int(warmup_completions), cls_of=tuple(int(c) for c in cls),
         has_mix=has_mix, has_faults=has_faults, n_faults=n_faults,
-        n_target=int(n_completions))
+        n_target=int(n_completions), telemetry_bins=int(telemetry_bins))
     x, et, ee, elapsed, occ, pw, meas_c, resp_c, energy_c = out_dev[:9]
     x, et, ee, pw = (np.asarray(v, np.float64) for v in (x, et, ee, pw))
     occ = np.asarray(occ, np.float64)
@@ -647,7 +701,7 @@ def simulate_batch(mu, targets, types0, seeds, *, distribution, order="PS",
            "class_energy": cls_ee, "class_occupancy": cls_occ}
     if has_faults:
         wasted, failcnt, rr_s, rr_n, topo = (
-            np.asarray(v, np.float64) for v in out_dev[9:])
+            np.asarray(v, np.float64) for v in out_dev[9:14])
         el = np.maximum(elapsed_np, 1e-12)
         res["goodput"] = x
         res["wasted_work"] = wasted / el
@@ -657,6 +711,13 @@ def simulate_batch(mu, targets, types0, seeds, *, distribution, order="PS",
                                           rr_s / np.maximum(rr_n, 1.0),
                                           np.nan)
         res["recovery_time"] = np.full(B, np.nan)
+    if telemetry_bins:
+        occ_t, bl_t, pw_t, hg_t = (np.asarray(v, np.float64)
+                                   for v in out_dev[-4:])
+        res["telemetry"] = {
+            "occupancy": occ_t, "backlog": bl_t, "power": pw_t,
+            "hedges": hg_t, "horizon": tel_h.astype(np.float64),
+            "bin_width": tel_h / telemetry_bins}
     return res
 
 
@@ -721,9 +782,19 @@ def simulate_policy_jax(cfg, core) -> "SimMetrics":
     return _metrics_row(out, 0)
 
 
+def _row_telemetry(out: dict, i: int) -> dict | None:
+    """One batch row of the res["telemetry"] block (None when absent)."""
+    tel = out.get("telemetry")
+    if tel is None:
+        return None
+    return {k: v[i] for k, v in tel.items()}
+
+
 def _metrics_row(out: dict, i: int) -> "SimMetrics":
+    from repro.obs.meta import run_meta
     from repro.sim.simulator import SimMetrics
     return SimMetrics(
+        meta=run_meta(), telemetry=_row_telemetry(out, i),
         throughput=float(out["throughput"][i]),
         mean_response_time=float(out["mean_response_time"][i]),
         mean_energy=float(out["mean_energy"][i]),

@@ -150,6 +150,13 @@ class SimMetrics:
     # faults.hedge_quantile > 0; None elsewhere). Cancelled losers are
     # already charged into wasted_work.
     spec_hedges: int | None = None
+    # Observability extras (repro.obs). meta: the run_meta() substrate
+    # block (jax backend, kernel mode, dtype) stamped by the engine
+    # wrappers so every metrics row says WHERE it was measured. telemetry:
+    # time-resolved per-pool series for this row ({occupancy, backlog,
+    # power, hedges, bin_width, horizon}) when the run asked for them.
+    meta: dict | None = None
+    telemetry: dict | None = None
 
 
 class ClosedNetworkSimulator:

@@ -80,10 +80,13 @@ class AdmissionController:
     def __init__(self, core, slo, class_of_type, queue_capacity: int, *,
                  mode: str = "shed", window: int = 256,
                  decrease: float = 0.7, margin: float = 0.8,
-                 adapt_every: int = 32):
+                 adapt_every: int = 32, recorder=None):
         if mode not in ("shed", "defer"):
             raise ValueError(f"unknown mode {mode!r}: shed | defer")
         self.core = core
+        # Flight recorder: explicit, else shared with the wrapped core.
+        self.recorder = (recorder if recorder is not None
+                         else getattr(core, "recorder", None))
         self.slo = tuple(slo)
         self.cls = np.asarray(class_of_type, dtype=np.int64)
         C = int(self.cls.max()) + 1
@@ -122,14 +125,28 @@ class AdmissionController:
 
     def offer(self, task_type: int, now: float) -> tuple[str, int | None]:
         j = self._try_place(task_type)
-        if j is not None:
-            return "admit", j
         c = int(self.cls[task_type])
+        if j is not None:
+            if self.recorder is not None:
+                self.recorder.record("admission", "admit", t=now,
+                                     type=task_type, cls=c, pool=j,
+                                     in_system=self.in_system)
+            return "admit", j
         if self.mode == "defer" and not self.slo[c].protected:
             self._deferred.append((task_type, now))
             self.deferred_total[c] += 1
+            if self.recorder is not None:
+                self.recorder.record("admission", "defer", t=now,
+                                     type=task_type, cls=c,
+                                     queued=len(self._deferred),
+                                     limit=float(self.limits[c]))
             return "defer", None
         self.shed[c] += 1
+        if self.recorder is not None:
+            self.recorder.record("admission", "shed", t=now,
+                                 type=task_type, cls=c,
+                                 limit=float(self.limits[c]),
+                                 in_system=self.in_system)
         return "shed", None
 
     def drain(self, now: float) -> list[tuple[int, int]]:
@@ -176,6 +193,10 @@ class AdmissionController:
             elif pressure < self.margin:             # headroom: re-open
                 self.limits[c] = min(float(self.n_slots),
                                      self.limits[c] + 1.0)
+        if self.recorder is not None:
+            self.recorder.record("admission", "adapt",
+                                 pressure=float(pressure),
+                                 limits=[float(x) for x in self.limits])
 
 
 __all__ = ["SLOClass", "AdmissionController", "default_admit_limits"]

@@ -52,14 +52,14 @@ _BIG_STAMP = np.int32(2**31 - 1)
 @functools.partial(jax.jit, static_argnames=(
     "order", "dist_specs", "n_arrivals", "n_slots", "warmup", "cls_of",
     "qcap", "hist_lo", "hist_hi", "hist_bins", "has_faults", "n_faults",
-    "total_steps", "hedge_spec"))
+    "total_steps", "hedge_spec", "telemetry_bins"))
 def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
                          admit, deadlines, f_times, f_scale, seg_tgt,
                          fail_cnt, hedge_c, period, c_age, overhead, hq,
                          hmin, *, order, dist_specs, n_arrivals, n_slots,
                          warmup, cls_of, qcap, hist_lo, hist_hi, hist_bins,
                          has_faults, n_faults, total_steps,
-                         hedge_spec=False):
+                         hedge_spec=False, telemetry_bins=0):
     """vmapped open scan core. Batched args: mu/P/target/rank (B, k, l),
     arr_t/arr_ty (B, T), keys (B, 2), modes (B,), admit (B, C) in-system
     caps, deadlines (B, C). Statics: the service order, per-class size
@@ -80,7 +80,16 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
     (fold_in(sub, 5) routing), first-completion-wins as for class
     hedges. With has_faults=False every fault branch is dropped at
     trace time, so the compiled no-fault program — and its results —
-    are unchanged; total_steps then equals 2 * T."""
+    are unchanged; total_steps then equals 2 * T.
+
+    Telemetry (`repro.obs`): telemetry_bins > 0 appends a time-resolved
+    carry — per-pool occupancy / backlog integrals (nb, l) and total
+    power / in-flight-hedge integrals (nb,) over nb equal bins of
+    [0, t_end]; each inter-event interval charges its dt (clipped at
+    t_end) to the bin containing the interval START, matching the host
+    `TelemetryAccumulator` convention bin for bin. telemetry_bins=0
+    (the default) drops the stanza at trace time — the compiled program
+    is the untelemetered one, byte for byte."""
     samplers = [_size_sampler(s) for s in dist_specs]
     n_cls = max(cls_of) + 1
     T = n_arrivals
@@ -143,6 +152,13 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
                 fstate = fstate + (jnp.zeros((k, hist_bins), jnp.float32),)
         else:
             fstate = ()
+        if telemetry_bins:
+            tstate = (jnp.zeros((telemetry_bins, l), jnp.float32),  # occ_t
+                      jnp.zeros((telemetry_bins, l), jnp.float32),  # bl_t
+                      jnp.zeros(telemetry_bins, jnp.float32),       # pw_t
+                      jnp.zeros(telemetry_bins, jnp.float32))       # hg_t
+        else:
+            tstate = ()
         state = (key, jnp.float32(0.0), jnp.int32(0),
                  jnp.full(ns, -1, jnp.int32),          # proc (-1 = free)
                  jnp.zeros(ns, jnp.int32),             # types
@@ -161,12 +177,12 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
                  jnp.zeros(n_cls, jnp.float32),        # drop_c
                  jnp.zeros((k, l), jnp.float32),       # occ
                  jnp.float32(0.0),                     # power integral
-                 fstate)
+                 fstate, tstate)
 
         def step(state, i):
             (key, now, a_ptr, proc, types, remaining, need, size_left,
              entry, stamp, run_pid, counts, hist, resp_c, meas_c, energy_c,
-             dm_c, drop_c, occ, power, fstate) = state
+             dm_c, drop_c, occ, power, fstate, tstate) = state
             if has_faults:
                 (sp, fail_left, partner, size0, wasted, failcnt, rrp_s,
                  rrp_n, rr_s, rr_n, rec_on, rec_pre, rec_t0, rec_s, rec_n,
@@ -246,6 +262,25 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
                           0.0, None)
             occ = occ + ow * counts.astype(jnp.float32)
             power = power + ow * pw
+            if telemetry_bins:
+                # pre-event state charged over [now, new_now) clipped at
+                # t_end, into the bin holding the interval start (the host
+                # TelemetryAccumulator convention)
+                occ_t, bl_t, pw_t, hg_t = tstate
+                binw = jnp.maximum(t_end, 1e-30) / telemetry_bins
+                w_t = jnp.clip(jnp.minimum(new_now, t_end) - now, 0.0, None)
+                b_t = jnp.clip((now / binw).astype(jnp.int32), 0,
+                               telemetry_bins - 1)
+                bl_pre = jnp.where(mask, size_left[:, None], 0.0).sum(0)
+                occ_t = occ_t.at[b_t].add(w_t * cntf)
+                bl_t = bl_t.at[b_t].add(w_t * bl_pre)
+                pw_t = pw_t.at[b_t].add(w_t * pw)
+                if has_faults:
+                    hg = (active & (fstate[2] >= 0)).astype(jnp.float32).sum()
+                else:
+                    hg = jnp.float32(0.0)
+                hg_t = hg_t.at[b_t].add(w_t * hg)
+                tstate = (occ_t, bl_t, pw_t, hg_t)
             now = new_now
             # ---- deplete in-service tasks over dt ----
             if order_ps:
@@ -597,13 +632,14 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
                 fstate = ()
             return (key, now, a_ptr, proc, types, remaining, need,
                     size_left, entry, stamp, run_pid, counts, hist, resp_c,
-                    meas_c, energy_c, dm_c, drop_c, occ, power, fstate), None
+                    meas_c, energy_c, dm_c, drop_c, occ, power, fstate,
+                    tstate), None
 
         n_steps = total_steps if has_faults else 2 * T
         state, _ = jax.lax.scan(step, state,
                                 jnp.arange(n_steps, dtype=jnp.int32))
         (_, _, _, _, _, _, _, _, _, _, _, _, hist, resp_c, meas_c,
-         energy_c, dm_c, drop_c, occ, power, fstate) = state
+         energy_c, dm_c, drop_c, occ, power, fstate, tstate) = state
         elapsed = t_end - t_warm
         if has_faults:
             (_, _, _, _, wasted, failcnt, _, _, rr_s, rr_n, rec_on, _,
@@ -613,11 +649,13 @@ def _simulate_open_fleet(mu, P, target, rank, arr_t, arr_ty, keys, modes,
                                       jnp.clip(t_end - rec_t0, 0.0, None),
                                       0.0)
             rec_n = rec_n + jnp.where(rec_on, 1.0, 0.0)
-            return (hist, resp_c, meas_c, energy_c, dm_c, drop_c, occ,
-                    power, elapsed, wasted, failcnt, rr_s, rr_n, rec_s,
-                    rec_n, topo)
-        return (hist, resp_c, meas_c, energy_c, dm_c, drop_c, occ, power,
-                elapsed)
+            ret = (hist, resp_c, meas_c, energy_c, dm_c, drop_c, occ,
+                   power, elapsed, wasted, failcnt, rr_s, rr_n, rec_s,
+                   rec_n, topo)
+        else:
+            ret = (hist, resp_c, meas_c, energy_c, dm_c, drop_c, occ,
+                   power, elapsed)
+        return ret + tstate
 
     return jax.vmap(one)(mu, P, target, rank, arr_t, arr_ty, keys, modes,
                          admit, deadlines, f_times, f_scale, seg_tgt,
@@ -631,7 +669,7 @@ def simulate_open_batch(mu, targets, arr_times, arr_types, seeds, *,
                         power: PowerModel = PROPORTIONAL_POWER, modes=None,
                         class_of_type=None, class_distributions=None,
                         admit_limits=None, hist: LogHistogram | None = None,
-                        deadlines=None, faults=None):
+                        deadlines=None, faults=None, telemetry_bins=0):
     """Simulate B open networks in one device call.
 
     mu: (k, l) shared or (B, k, l); targets: (B, k, l) reference placements
@@ -654,7 +692,16 @@ def simulate_open_batch(mu, targets, arr_times, arr_types, seeds, *,
     dict then gains goodput / wasted_work / failures / topology_events /
     reroute_latency / recovery_time rows. With faults=None the compiled
     program is the pre-fault one, byte for byte.
+
+    `telemetry_bins` > 0 adds res["telemetry"]: raw dt-weighted integrals
+    of per-pool occupancy / backlog (B, nb, l), total power and in-flight
+    hedges (B, nb) over nb equal bins of [0, t_end] per point, plus
+    bin_width / horizon (B,). Feed to `repro.obs.telemetry_series` for
+    per-bin time averages. telemetry_bins=0 leaves the compiled program
+    untouched (trace-time-static, like `faults`).
     """
+    if telemetry_bins < 0:
+        raise ValueError("telemetry_bins must be >= 0")
     targets = np.asarray(targets)
     B, k, l = targets.shape
     mu = np.asarray(mu, dtype=np.float64)
@@ -758,7 +805,8 @@ def simulate_open_batch(mu, targets, arr_times, arr_types, seeds, *,
         cls_of=tuple(int(c) for c in cls), qcap=int(queue_capacity),
         hist_lo=float(hist.lo), hist_hi=float(hist.hi),
         hist_bins=int(hist.n_bins), has_faults=has_faults,
-        n_faults=n_faults, total_steps=total_steps, hedge_spec=hedge_spec)
+        n_faults=n_faults, total_steps=total_steps, hedge_spec=hedge_spec,
+        telemetry_bins=int(telemetry_bins))
     (h, resp_c, meas_c, energy_c, dm_c, drop_c, occ, power_int,
      elapsed) = out_dev[:9]
     h = np.asarray(h, np.float64)
@@ -799,7 +847,7 @@ def simulate_open_batch(mu, targets, arr_times, arr_types, seeds, *,
            "class_deadline_met": cls_dm}
     if has_faults:
         wasted, failcnt, rr_s, rr_n, rec_s, rec_n, topo = (
-            np.asarray(v, np.float64) for v in out_dev[9:])
+            np.asarray(v, np.float64) for v in out_dev[9:16])
         el = np.maximum(elapsed, 1e-12)
         with np.errstate(divide="ignore", invalid="ignore"):
             res["goodput"] = x
@@ -810,6 +858,14 @@ def simulate_open_batch(mu, targets, arr_times, arr_types, seeds, *,
                                               / np.maximum(rr_n, 1.0), np.nan)
             res["recovery_time"] = np.where(rec_n > 0, rec_s
                                             / np.maximum(rec_n, 1.0), np.nan)
+    if telemetry_bins:
+        occ_t, bl_t, pw_t, hg_t = (np.asarray(v, np.float64)
+                                   for v in out_dev[-4:])
+        horizon = arr_times[:, -1].astype(np.float64)
+        res["telemetry"] = {
+            "occupancy": occ_t, "backlog": bl_t, "power": pw_t,
+            "hedges": hg_t, "horizon": horizon,
+            "bin_width": horizon / telemetry_bins}
     return res
 
 
@@ -849,8 +905,11 @@ def simulate_open_policy_jax(cfg, core):
 
 def open_metrics_row(out: dict, i: int, track_deadlines: bool = True):
     """One batch row as an open-mode SimMetrics."""
+    from repro.obs.meta import run_meta
+    from repro.sim.engine_jax import _row_telemetry
     from repro.sim.simulator import SimMetrics
     return SimMetrics(
+        meta=run_meta(), telemetry=_row_telemetry(out, i),
         throughput=float(out["throughput"][i]),
         mean_response_time=float(out["mean_response_time"][i]),
         mean_energy=float(out["mean_energy"][i]),

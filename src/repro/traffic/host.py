@@ -29,11 +29,16 @@ from repro.traffic.quantiles import QUANTILES, exact_quantiles
 _INF = float("inf")
 
 
-def run_open(sim, core, return_samples: bool = False):
+def run_open(sim, core, return_samples: bool = False,
+             telemetry: int | None = None):
     """Run `sim`'s open-mode config under a prebuilt SchedulerCore.
 
     Returns SimMetrics, or (SimMetrics, per-class sample lists) with
     `return_samples` (in-window response times, for quantile validation).
+    `telemetry` (an int n_bins) attaches a `repro.obs.TelemetryAccumulator`
+    time series over [0, t_end] to the returned SimMetrics — the host twin
+    of the device engine's telemetry_bins carry, charged bin for bin by
+    the same start-bin convention. telemetry=None changes nothing.
     """
     cfg = sim.cfg
     tr = cfg.traffic
@@ -105,6 +110,11 @@ def run_open(sim, core, return_samples: bool = False):
                 draw += P[task_type[ids[0]], jj]
         return draw
 
+    tel = None
+    if telemetry is not None:
+        from repro.obs.telemetry import TelemetryAccumulator
+        tel = TelemetryAccumulator(int(telemetry), t_end, l)
+
     now = 0.0
     aptr = 0
 
@@ -112,6 +122,12 @@ def run_open(sim, core, return_samples: bool = False):
         """Integrate the window overlap, advance time, deplete service."""
         nonlocal now, power_int, occupancy
         if dt > 0.0:
+            if tel is not None:
+                tel.add(now, dt,
+                        [len(proc_tasks[jj]) for jj in range(l)],
+                        [size_left[np.asarray(proc_tasks[jj])].sum()
+                         if proc_tasks[jj] else 0.0 for jj in range(l)],
+                        pool_draw())
             ow = min(now + dt, t_end) - max(now, t_warm)
             if ow > 0.0:
                 occupancy += counts * ow
@@ -226,6 +242,8 @@ def run_open(sim, core, return_samples: bool = False):
                                 [exact_quantiles(s, QUANTILES)
                                  for s in samples]),
                             track_deadlines=tr.deadlines is not None)
+    if tel is not None:
+        metrics.telemetry = tel.series()
     if return_samples:
         return metrics, samples
     return metrics

@@ -502,3 +502,67 @@ def test_autoscale_trace_conformance_goodput_energy_drops():
             rows.append((g_rel, e_rel, d_abs))
     g, e, _ = np.asarray(rows).T
     assert g.mean() < 0.05 and e.mean() < 0.05, rows
+
+
+# ---------------------------------------------------------------------------
+# Telemetry conformance: with the trace-time-static telemetry carry armed on
+# the device open engine and the host accumulator attached to the oracle
+# loop, both sides integrate the SAME quantities (total occupancy, power
+# draw) into the SAME bins over the SAME horizon — the arrival realization
+# is shared, only the task-size streams differ, so the series must agree
+# statistically: per-cell mean-over-bins relative error under the fault-cell
+# throughput gate, per-bin worst case under the wasted-work gate.
+# ---------------------------------------------------------------------------
+from repro.obs import telemetry_series  # noqa: E402
+from repro.sched.api import as_core  # noqa: E402
+from repro.traffic.host import run_open  # noqa: E402
+
+O_NBINS = 12
+
+
+def test_open_telemetry_conformance_occupancy_power():
+    pol = GrInPriorityPolicy((2.0, 1.0))
+    dist = make_distribution("exponential")
+    occ_mean, pw_mean = [], []
+    for mi in range(len(OMUS)):
+        mu = OMUS[mi]
+        spec = _open_specs(mu)[0]
+        mix = derive_target_mix(spec, mu.shape[1], O_QCAP)
+        tgt = np.asarray(pol.solve_target(mu, mix))
+        for s in OSEEDS:
+            cfg = open_sim_config(mu, spec, n_arrivals=O_T,
+                                  warmup_arrivals=O_WARM,
+                                  queue_capacity=O_QCAP, class_of_type=O_CLS,
+                                  target_mix=mix, distribution=dist,
+                                  order="PS", seed=s, power=POWER)
+            host = run_open(ClosedNetworkSimulator(cfg), as_core(pol, mu),
+                            telemetry=O_NBINS)
+            times, tys = spec.sample(s, O_T)
+            dev = simulate_open_batch(
+                mu[None], tgt[None], times[None], tys[None], [s],
+                distribution=dist, queue_capacity=O_QCAP, order="PS",
+                warmup_arrivals=O_WARM, class_of_type=O_CLS, power=POWER,
+                modes=np.full(1, MODE_DEFICIT, np.int32),
+                telemetry_bins=O_NBINS)
+            hs = telemetry_series(host.telemetry)
+            ds = telemetry_series(dev["telemetry"])
+            # shared arrival realization: identical horizon, hence bins
+            assert np.isclose(float(ds["horizon"][0]),
+                              float(hs["horizon"]), rtol=1e-5)
+            # no faults armed: hedge series is identically zero on both
+            assert not np.any(hs["hedges"]) and not np.any(ds["hedges"][0])
+            h_occ = np.asarray(hs["occupancy"]).sum(axis=1)   # total in-system
+            d_occ = np.asarray(ds["occupancy"][0]).sum(axis=1)
+            h_pw = np.asarray(hs["power"])
+            d_pw = np.asarray(ds["power"][0])
+            assert h_occ.min() > 0 and h_pw.min() > 0, (mi, s)
+            occ_rel = np.abs(d_occ - h_occ) / h_occ
+            pw_rel = np.abs(d_pw - h_pw) / h_pw
+            assert occ_rel.max() < F_WASTE_TOL, (mi, s, occ_rel)
+            assert pw_rel.max() < F_WASTE_TOL, (mi, s, pw_rel)
+            occ_mean.append(occ_rel.mean())
+            pw_mean.append(pw_rel.mean())
+    # grid means sit at the fault-cell throughput gate
+    assert np.mean(occ_mean) < F_X_TOL, occ_mean
+    assert np.mean(pw_mean) < F_X_TOL, pw_mean
+    assert max(pw_mean) < 1.5 * F_X_TOL, pw_mean

@@ -1,0 +1,118 @@
+"""Perf-regression guard: diff a benchmark JSON against a committed baseline.
+
+    PYTHONPATH=src python -m tools.bench_compare NEW.json \
+        --baseline BENCH_pr9.json [--threshold 0.25] [--hard] \
+        [--metric traces.diurnal.governor.x_per_joule ...]
+
+Both files are nested dicts of numeric leaves (the `benchmarks/` payload
+schema); they are flattened to dotted keys and compared on the
+intersection. Each metric's direction is inferred from its name — keys
+containing time / latency / p99 / edp / energy / wasted / drop /
+backlog / us_per are lower-is-better, everything else (goodput,
+throughput, x_per_joule, ...) higher-is-better — so a "regression" is
+always the harmful direction. `--metric` (repeatable) restricts the
+check to named headline metrics; without it every shared numeric key is
+compared.
+
+Promotion path (documented contract with .github/workflows/ci.yml): the
+CI steps run WARN-ONLY (no --hard) while benchmark noise on shared
+runners is being characterized; once a metric's run-to-run spread is
+known, add `--hard --metric <key>` to the CI step to make >threshold
+regressions fail the build. Runs whose `meta.kernel_mode` differ
+(e.g. pallas-compiled vs jnp-reference) are never comparable: the tool
+skips the comparison and says so rather than reporting phantom
+regressions.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+LOWER_BETTER = ("time", "latency", "p99", "p999", "edp", "energy", "wasted",
+                "drop", "backlog", "us_per")
+
+
+def flatten(d: dict, prefix: str = "") -> dict:
+    """Nested dict -> {dotted.key: float} over numeric (non-bool) leaves."""
+    out = {}
+    for k, v in d.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(flatten(v, key + "."))
+        elif isinstance(v, (int, float)) and not isinstance(v, bool):
+            out[key] = float(v)
+    return out
+
+
+def lower_is_better(key: str) -> bool:
+    return any(tok in key.lower() for tok in LOWER_BETTER)
+
+
+def compare(new: dict, base: dict, threshold: float,
+            metrics: list[str] | None = None) -> tuple[list, list]:
+    """-> (regressions, improvements); each row is (key, base, new, signed
+    fractional change where positive = worse)."""
+    fn, fb = flatten(new), flatten(base)
+    keys = sorted(set(fn) & set(fb) - {"meta"})
+    keys = [k for k in keys if not k.startswith("meta.")]
+    if metrics:
+        missing = [m for m in metrics if m not in keys]
+        if missing:
+            raise SystemExit(f"--metric not in both files: {missing}")
+        keys = metrics
+    regressions, improvements = [], []
+    for k in keys:
+        b, n = fb[k], fn[k]
+        if b == 0.0:
+            continue                      # no relative scale to judge by
+        change = (n - b) / abs(b)
+        worse = change if lower_is_better(k) else -change
+        row = (k, b, n, worse)
+        if worse > threshold:
+            regressions.append(row)
+        elif worse < -threshold:
+            improvements.append(row)
+    return regressions, improvements
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("new", help="fresh benchmark JSON (reports/benchmarks/*)")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline JSON (BENCH_pr*.json)")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="fractional regression to flag (default 0.25)")
+    ap.add_argument("--metric", action="append", default=None,
+                    help="restrict to this dotted key (repeatable)")
+    ap.add_argument("--hard", action="store_true",
+                    help="exit 1 on regressions (CI promotion path); "
+                         "default is warn-only")
+    args = ap.parse_args(argv)
+    with open(args.new) as f:
+        new = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    km_new = (new.get("meta") or {}).get("kernel_mode")
+    km_base = (base.get("meta") or {}).get("kernel_mode")
+    if km_new and km_base and km_new != km_base:
+        print(f"bench_compare: SKIP — kernel modes differ "
+              f"({km_base} baseline vs {km_new} new); not comparable")
+        return 0
+    regs, imps = compare(new, base, args.threshold, args.metric)
+    for k, b, n, w in imps:
+        print(f"IMPROVED   {k}: {b:.6g} -> {n:.6g} ({-w:+.1%})")
+    for k, b, n, w in regs:
+        print(f"REGRESSION {k}: {b:.6g} -> {n:.6g} ({w:+.1%} worse)")
+    if not regs:
+        print(f"bench_compare: OK — no metric regressed past "
+              f"{args.threshold:.0%} vs {args.baseline}")
+        return 0
+    print(f"bench_compare: {len(regs)} metric(s) regressed past "
+          f"{args.threshold:.0%}"
+          + ("" if args.hard else " (warn-only; add --hard to fail CI)"))
+    return 1 if args.hard else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

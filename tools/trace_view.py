@@ -1,0 +1,132 @@
+"""Summarize a flight-recorder Chrome trace (repro.obs export).
+
+    PYTHONPATH=src python -m tools.trace_view TRACE.json [--top 10]
+    PYTHONPATH=src python -m tools.trace_view --selftest
+
+Prints per-layer and per-(layer, kind) event counts, drop statistics,
+and the top-k profiling spans by duration. `--selftest` runs a small
+open-network simulation with the recorder, device telemetry and the
+profiler all armed, exports the trace to a temp file, validates the
+Chrome trace-event schema, and summarizes it — the CI trace-export
+smoke step.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import Counter
+
+REQUIRED_EVENT_KEYS = {"name", "cat", "ph", "ts", "pid", "tid"}
+
+
+def validate(doc: dict) -> list[dict]:
+    """Chrome trace-event schema check; returns the event list or raises."""
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        raise ValueError("not a Chrome trace: missing traceEvents")
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        raise ValueError("traceEvents must be a list")
+    for i, e in enumerate(events):
+        missing = REQUIRED_EVENT_KEYS - set(e)
+        if missing:
+            raise ValueError(f"event {i} missing keys {sorted(missing)}")
+        if e["ph"] not in ("i", "X", "B", "E", "M"):
+            raise ValueError(f"event {i} has unknown phase {e['ph']!r}")
+        if e["ph"] == "X" and "dur" not in e:
+            raise ValueError(f"complete event {i} missing dur")
+    return events
+
+
+def summarize(doc: dict, top: int = 10) -> str:
+    events = validate(doc)
+    meta = doc.get("metadata", {})
+    lines = [f"{len(events)} events"
+             + (f" ({meta.get('dropped', 0)} dropped, capacity "
+                f"{meta.get('capacity', '?')})" if meta else "")]
+    by_layer = Counter(e["cat"] for e in events)
+    lines.append("per-layer:")
+    for layer, n in sorted(by_layer.items(), key=lambda kv: -kv[1]):
+        lines.append(f"  {layer:<12} {n}")
+    by_kind = Counter((e["cat"], e["name"]) for e in events if e["ph"] == "i")
+    lines.append("per-kind:")
+    for (layer, kind), n in sorted(by_kind.items(), key=lambda kv: -kv[1]):
+        lines.append(f"  {layer}/{kind:<20} {n}")
+    spans = [e for e in events if e["ph"] == "X"]
+    if spans:
+        lines.append(f"top {min(top, len(spans))} spans by duration:")
+        for e in sorted(spans, key=lambda e: -e["dur"])[:top]:
+            lines.append(f"  {e['name']:<28} {e['dur'] / 1e3:10.3f} ms")
+    return "\n".join(lines)
+
+
+def _selftest() -> int:
+    """Small open sim, recorder + telemetry + profiler armed; export,
+    validate, summarize."""
+    import os
+    import tempfile
+
+    import numpy as np
+
+    import repro.sched  # noqa: F401  (canonical import entry)
+    from repro.obs import TraceRecorder, profile_block, telemetry_series
+    from repro.sched.api import SchedulerCore, get_policy, solve_targets_jax
+    from repro.sim.distributions import make_distribution
+    from repro.traffic import PoissonArrivals, TrafficSpec
+    from repro.traffic.engine import simulate_open_batch
+
+    rec = TraceRecorder(capacity=4096)
+    mu = np.array([[6.0, 2.0], [2.0, 5.0]])
+    core = SchedulerCore(get_policy("opt"), mu, recorder=rec)
+    core.reset(mu, np.array([4, 4]))
+    for t in (0, 1, 0, 1, 0):
+        j = core.route(t)
+        core.complete(t, j)
+    spec = TrafficSpec((PoissonArrivals(4.0), PoissonArrivals(3.0)),
+                       np.eye(2))
+    times, tys = spec.sample(0, 200)
+    with profile_block("selftest") as prof:
+        targets, _ = solve_targets_jax(mu, np.array([[4, 4]]))
+        core.route_many(np.array([0, 1, 0, 1], np.int64))
+        out = simulate_open_batch(
+            mu, np.asarray(targets, np.int64),
+            times[None], tys[None], [0],
+            distribution=make_distribution("exponential"), queue_capacity=6,
+            warmup_arrivals=20, class_of_type=[0, 1], telemetry_bins=8)
+    series = telemetry_series(out["telemetry"])
+    rec.record("host", "telemetry_summary", t=float(times[-1]),
+               mean_occupancy=float(series["occupancy"][0].sum(1).mean()),
+               mean_power=float(series["power"][0].mean()))
+    path = os.path.join(tempfile.mkdtemp(prefix="repro_trace_"),
+                        "trace.json")
+    n = rec.export(path, spans=prof.spans)
+    with open(path) as f:
+        doc = json.load(f)
+    print(summarize(doc))
+    assert n == len(doc["traceEvents"]) > 0
+    assert any(e["ph"] == "X" for e in doc["traceEvents"]), "no spans"
+    assert any(e["cat"] == "sched" for e in doc["traceEvents"])
+    print(f"selftest OK: {n} events exported to {path}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", nargs="?", help="Chrome trace JSON to summarize")
+    ap.add_argument("--top", type=int, default=10,
+                    help="spans to list (default 10)")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run a tiny traced simulation and validate export")
+    args = ap.parse_args(argv)
+    if args.selftest:
+        return _selftest()
+    if not args.trace:
+        ap.error("need a trace file or --selftest")
+    with open(args.trace) as f:
+        doc = json.load(f)
+    print(summarize(doc, top=args.top))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
